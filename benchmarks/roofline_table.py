@@ -1,0 +1,52 @@
+"""Render the dry-run results directory as the §Roofline / §Dry-run tables."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import RESULTS
+
+DRYRUN = os.path.join(RESULTS, "dryrun")
+
+
+def load(tagged: bool = False):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        d = json.load(open(f))
+        if bool(d.get("tag")) != tagged:
+            continue
+        rows.append(d)
+    return rows
+
+
+def fmt_table(rows, mesh: str | None = None) -> str:
+    out = ["| arch | shape | mesh | mem/dev GB | t_comp s | t_mem s | "
+           "t_coll s | dominant | useful |",
+           "|---|---|---|---:|---:|---:|---:|---|---:|"]
+    for d in rows:
+        if mesh and d["mesh"] != mesh:
+            continue
+        r = d["roofline"]
+        out.append(
+            f"| {d['arch']} | {d['shape']} | {d['mesh']} | "
+            f"{d['memory']['peak_per_device_gb']:.2f} | "
+            f"{r['t_compute_s']:.2e} | {r['t_memory_s']:.2e} | "
+            f"{r['t_collective_s']:.2e} | {r['dominant']} | "
+            f"{d['useful_ratio']:.3f} |")
+    return "\n".join(out)
+
+
+def main():
+    rows = load()
+    n = len(rows)
+    doms = {}
+    for d in rows:
+        doms[d["roofline"]["dominant"]] = doms.get(
+            d["roofline"]["dominant"], 0) + 1
+    return [{"name": "roofline/pairs_compiled", "us_per_call": 0,
+             "derived": f"n={n};dominants={doms}"}]
+
+
+if __name__ == "__main__":
+    print(fmt_table(load()))

@@ -1,0 +1,40 @@
+"""Benchmark orchestrator — one entry per paper table/figure + framework
+microbenches. Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer steps (CI-scale)")
+    args = ap.parse_args()
+    steps = 30 if args.quick else 60
+
+    from benchmarks import (fig1_loss_curves, fig2_accuracy, fig3_speedup,
+                            fig_compression, fig_noniid, fig_topology,
+                            hypergrad_bench, mixing_bench, roofline_table)
+
+    rows = []
+    rows += fig1_loss_curves.main(steps=steps)
+    rows += fig2_accuracy.main(steps=steps)
+    rows += fig3_speedup.main(steps=max(steps // 2, 10))
+    rows += fig_topology.main(steps=max(steps // 2, 10))
+    rows += fig_compression.main(steps=max(steps // 2, 10))
+    rows += fig_noniid.main(steps=max(steps // 2, 10))
+    rows += mixing_bench.main()
+    rows += hypergrad_bench.main()
+    rows += roofline_table.main()
+
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(f"{r['name']},{r['us_per_call']},\"{r['derived']}\"")
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.io import latest_step, load_pytree, restore, save
+
+__all__ = ["latest_step", "load_pytree", "restore", "save"]

@@ -1,0 +1,68 @@
+"""Checkpointing: flattened-pytree .npz with structure manifest.
+
+Single-controller friendly: arrays are fully gathered before writing (fine for
+the CPU simulator and smoke-scale runs; a real multi-host deployment would
+swap in per-shard writes behind the same API — the API is path-keyed so that
+switch is local to this file).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any
+
+import jax
+import numpy as np
+
+Tree = Any
+_SEP = "::"
+
+
+def _flatten(tree: Tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(str(p) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.name == "bfloat16":  # numpy .npz can't store bf16
+            arr = arr.astype(np.float32)
+        flat[key] = arr
+    return flat
+
+
+def save(path: str, step: int, tree: Tree, extra: dict | None = None) -> str:
+    os.makedirs(path, exist_ok=True)
+    fname = os.path.join(path, f"ckpt_{step:08d}.npz")
+    flat = _flatten(tree)
+    np.savez(fname, **flat)
+    manifest = {"step": step, "keys": sorted(flat), "extra": extra or {}}
+    with open(os.path.join(path, f"ckpt_{step:08d}.json"), "w") as f:
+        json.dump(manifest, f)
+    return fname
+
+
+def latest_step(path: str) -> int | None:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(path)
+             if (m := re.match(r"ckpt_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def load_pytree(path: str, step: int) -> dict[str, np.ndarray]:
+    with np.load(os.path.join(path, f"ckpt_{step:08d}.npz")) as z:
+        return {k: z[k] for k in z.files}
+
+
+def restore(path: str, step: int, template: Tree) -> Tree:
+    """Restore into the structure of ``template`` (dtypes/shapes checked)."""
+    flat = load_pytree(path, step)
+    paths, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in paths:
+        key = _SEP.join(str(x) for x in p)
+        arr = flat[key]
+        if arr.shape != leaf.shape:
+            raise ValueError(f"{key}: shape {arr.shape} != {leaf.shape}")
+        leaves.append(jax.numpy.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

@@ -1,0 +1,5 @@
+from repro.configs.base import ArchSpec
+from repro.configs.registry import ARCHS, SHAPES, InputShape, all_specs, get, pairs
+
+__all__ = ["ARCHS", "ArchSpec", "InputShape", "SHAPES", "all_specs", "get",
+           "pairs"]

@@ -1,0 +1,16 @@
+"""minicpm-2b [dense] — llama-like arch trained with the WSD schedule.
+[arXiv:2404.06395] (repro.optim.wsd_schedule implements WSD.)"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec
+from repro.models.config import ModelConfig
+
+SPEC = ArchSpec(
+    config=ModelConfig(
+        name="minicpm-2b", family="dense",
+        n_layers=40, d_model=2304, n_heads=36, n_kv_heads=36,
+        d_ff=5760, vocab=122753,
+        dtype=jnp.bfloat16, param_dtype=jnp.bfloat16, remat=True,
+        source="arXiv:2404.06395"),
+    train_mode="dp", long_ctx="swa",
+    notes="MHA (kv=heads), WSD schedule")

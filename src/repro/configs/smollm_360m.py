@@ -1,0 +1,15 @@
+"""smollm-360m [dense] — llama-arch small. [hf:HuggingFaceTB/SmolLM-135M]"""
+import jax.numpy as jnp
+
+from repro.configs.base import ArchSpec
+from repro.models.config import ModelConfig
+
+SPEC = ArchSpec(
+    config=ModelConfig(
+        name="smollm-360m", family="dense",
+        n_layers=32, d_model=960, n_heads=15, n_kv_heads=5,
+        d_ff=2560, vocab=49152,
+        dtype=jnp.bfloat16, param_dtype=jnp.float32, remat=True,
+        source="hf:HuggingFaceTB/SmolLM-135M"),
+    train_mode="dp", long_ctx="swa",
+    notes="GQA kv=5")

@@ -1,0 +1,29 @@
+"""repro.core — the paper's contribution as a composable JAX library.
+
+Public surface:
+  topology.{ring,torus2d,complete,star,get,Topology}
+  problems.{BilevelProblem,quadratic_problem,logreg_hyperopt}
+  hypergrad.{HypergradConfig,stochastic_hypergrad,expected_hypergrad}
+  common.HParams, driver.run
+  mdbo / vrdbo / baselines step functions
+  tracking.{dense_mix,ring_mix_rolled,ring_mix_local}
+"""
+from repro.core import (baselines, compression, distributed, mdbo, topology,
+                        tracking, vrdbo)
+from repro.core.common import HParams, consensus_error, node_mean, replicate
+from repro.core.driver import ALGOS, RunResult, run
+from repro.core.hypergrad import (HypergradConfig, expected_hypergrad,
+                                  stochastic_hypergrad)
+from repro.core.problems import (BilevelProblem, accuracy, logreg_hyperopt,
+                                 quadratic_problem)
+from repro.core.topology import Topology, complete, get, ring, star, torus2d
+from repro.core.tracking import dense_mix, ring_mix_local, ring_mix_rolled
+
+__all__ = [
+    "ALGOS", "BilevelProblem", "HParams", "HypergradConfig", "RunResult",
+    "Topology", "accuracy", "baselines", "complete", "consensus_error",
+    "dense_mix", "expected_hypergrad", "get", "logreg_hyperopt", "mdbo",
+    "node_mean", "quadratic_problem", "replicate", "ring", "ring_mix_local",
+    "ring_mix_rolled", "run", "star", "stochastic_hypergrad", "topology",
+    "torus2d", "tracking", "vrdbo", "compression", "distributed",
+]

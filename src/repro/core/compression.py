@@ -1,0 +1,87 @@
+"""Communication compression for the gossip step (beyond-paper extension).
+
+The paper's related work (Koloskova et al. 2019; Tang et al. 2019) improves
+decentralized *single-level* methods by compressing communicated variables.
+This module lifts the idea to the bilevel algorithms: the mixing step becomes
+
+    X_{t+1} ← X_t + (W − I) C(X_t)        (compressed-gossip form)
+
+where ``C`` is a per-leaf sparsifier. Only the compressed values would cross
+the network, so communicated bytes drop by the keep-ratio while the self term
+stays exact. Used by benchmarks/fig_compression.py to chart the
+bytes-vs-convergence tradeoff; not enabled in the paper-faithful baselines.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.tracking import MixFn
+
+
+def topk_sparsify(ratio: float) -> Callable:
+    """Keep the top ``ratio`` fraction of entries by magnitude, per node and
+    per leaf (deterministic; the classic top-k compressor)."""
+    assert 0.0 < ratio <= 1.0
+
+    def compress(tree):
+        def leaf(a):
+            if ratio >= 1.0:
+                return a
+            flat = a.reshape(a.shape[0], -1)           # [K, d]
+            d = flat.shape[1]
+            k = max(int(d * ratio), 1)
+            # threshold = k-th largest magnitude per node
+            thresh = jax.lax.top_k(jnp.abs(flat), k)[0][:, -1:]
+            mask = jnp.abs(flat) >= thresh
+            return (flat * mask).reshape(a.shape).astype(a.dtype)
+        return jax.tree.map(leaf, tree)
+
+    return compress
+
+
+def random_sparsify(ratio: float, seed: int = 0) -> Callable:
+    """Keep a random ``ratio`` fraction (unbiased up to 1/ratio scaling)."""
+    assert 0.0 < ratio <= 1.0
+
+    def compress(tree):
+        def leaf(path, a):
+            if ratio >= 1.0:
+                return a
+            key = jax.random.PRNGKey(abs(hash(str(path))) % (2 ** 31) + seed)
+            mask = jax.random.bernoulli(key, ratio, a.shape)
+            return (a * mask / ratio).astype(a.dtype)
+        return jax.tree_util.tree_map_with_path(leaf, tree)
+
+    return compress
+
+
+def compressed_mix(W, compressor: Callable) -> MixFn:
+    """Gossip with compressed neighbor contributions:
+    mix(A) = A + (W − I) C(A).  Exact when C = identity."""
+    import numpy as np
+    Wm = jnp.asarray(np.asarray(W) - np.eye(np.asarray(W).shape[0]))
+
+    def mix(tree):
+        comp = compressor(tree)
+
+        def leaf(a, c):
+            return (a + jnp.tensordot(Wm, c, axes=([1], [0]))).astype(a.dtype)
+
+        return jax.tree.map(leaf, tree, comp)
+
+    return mix
+
+
+def comm_bytes_per_mix(tree, ratio: float) -> int:
+    """Communicated payload per gossip round per node (2 neighbors on a
+    ring): 2 · ratio · (values + indices)."""
+    total = 0
+    for a in jax.tree.leaves(tree):
+        d = a.size // a.shape[0]
+        kept = max(int(d * ratio), 1)
+        per_entry = a.dtype.itemsize + (4 if ratio < 1.0 else 0)  # + index
+        total += 2 * kept * per_entry
+    return total

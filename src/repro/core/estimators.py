@@ -1,0 +1,34 @@
+"""Gradient estimators: momentum (Eq. 7) and STORM variance reduction (Eq. 10).
+
+Both operate on arbitrary pytrees of per-node quantities. They are pure
+functions so the same code drives the single-process simulator (leading node
+axis K) and the shard_map-distributed trainer (per-shard node slices).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hypergrad import tree_add, tree_scale, tree_sub
+
+
+def momentum_update(prev, grad, a: float):
+    """U_t = (1 − a) U_{t−1} + a Δ_t    with a = α·η ∈ (0, 1]   (Eq. 7)."""
+    return jax.tree.map(lambda u, d: (1.0 - a) * u + a * d, prev, grad)
+
+
+def storm_update(prev, grad_now, grad_prev, a: float):
+    """U_t = (1 − a)(U_{t−1} + Δ_t − Δ_{t−1|t}) + a Δ_t    with a = α·η² (Eq. 10).
+
+    ``grad_prev`` must be evaluated at the *previous* parameters with the
+    *current* sample (the STORM correction term).
+    """
+    def leaf(u, d_now, d_prev):
+        return (1.0 - a) * (u + d_now - d_prev) + a * d_now
+    return jax.tree.map(leaf, prev, grad_now, grad_prev)
+
+
+def sgd_update(prev, grad, a: float):
+    """Vanilla stochastic gradient (DSBO baseline): the estimator IS the grad."""
+    del prev, a
+    return grad

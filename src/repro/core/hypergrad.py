@@ -1,0 +1,180 @@
+"""Stochastic hypergradient (Eq. 4 of the paper) for arbitrary pytrees.
+
+The hypergradient of F(x) = f(x, y*(x)) is (Eq. 2/3)
+
+    ∇F(x, y) = ∇_x f(x, y) − ∇²_{xy} g(x, y) [∇²_{yy} g(x, y)]^{-1} ∇_y f(x, y).
+
+The inverse Hessian is approximated with the Ghadimi–Wang randomized Neumann
+series (Eq. 4):
+
+    H^{-1} ≈ (J / L_gy) Π_{j=1..J̃} (I − ∇²_{yy} g(x, y; ζ_j) / L_gy),   J̃ ~ U{0..J}
+
+All second-order quantities are *matrix-free*:
+
+* Hessian-vector products ``∇²_{yy} g · v`` use forward-over-reverse
+  ``jax.jvp(grad_y g, (y,), (v,))`` — one extra forward pass per product.
+* The cross term ``∇²_{xy} g · v`` is ``∇_x ⟨∇_y g(x, y), v⟩`` (v constant).
+
+This keeps the per-node computation local (nothing but parameters/estimators is
+ever communicated — the paper's key communication-efficiency property) and works
+unchanged for 100-dim logistic regression and 314B-parameter pytrees.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.flatten_util
+import jax.numpy as jnp
+
+from repro.core.problems import BilevelProblem
+
+Params = Any
+Batch = Any
+
+
+def tree_dot(a, b) -> jax.Array:
+    # elementwise product + f32-accumulated sum, NOT jnp.vdot: vdot's flatten
+    # merges sharded dims, which makes GSPMD all-gather the whole tensor
+    # (catastrophic for 314B-parameter leaves).
+    def leaf(u, v):
+        return jnp.sum(u * v, dtype=jnp.float32)
+    leaves = jax.tree.map(leaf, a, b)
+    return jax.tree.reduce(jnp.add, leaves)
+
+
+def tree_axpy(alpha, x, y):
+    """alpha * x + y"""
+    return jax.tree.map(lambda u, v: alpha * u + v, x, y)
+
+
+def tree_scale(alpha, x):
+    return jax.tree.map(lambda u: alpha * u, x)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(lambda u, v: u - v, a, b)
+
+
+def tree_add(a, b):
+    return jax.tree.map(lambda u, v: u + v, a, b)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_norm(a) -> jax.Array:
+    return jnp.sqrt(tree_dot(a, a))
+
+
+@dataclasses.dataclass(frozen=True)
+class HypergradConfig:
+    """J: max Neumann terms. lip_gy: L_{g_y} scaling. randomize: sample J̃~U{0..J}
+    (the paper's unbiased-in-expectation estimator) vs always using all J terms
+    (deterministic truncation — lower variance, same O((1−μ/L)^J) bias)."""
+
+    J: int = 10
+    lip_gy: float = 10.0
+    randomize: bool = True
+
+
+def hvp_yy(g: Callable, x: Params, y: Params, batch: Batch, v: Params) -> Params:
+    """∇²_{yy} g(x, y; batch) · v via forward-over-reverse."""
+    grad_y = lambda yy: jax.grad(g, argnums=1)(x, yy, batch)
+    return jax.jvp(grad_y, (y,), (v,))[1]
+
+
+def jvp_xy(g: Callable, x: Params, y: Params, batch: Batch, v: Params) -> Params:
+    """∇²_{xy} g(x, y; batch) · v  =  ∇_x ⟨∇_y g(x, y; batch), v⟩."""
+    def inner(xx):
+        gy = jax.grad(g, argnums=1)(xx, y, batch)
+        return tree_dot(gy, jax.lax.stop_gradient(v))
+    return jax.grad(inner)(x)
+
+
+def neumann_inverse_hvp(g: Callable, x: Params, y: Params, v: Params,
+                        hbatches: Batch, cfg: HypergradConfig,
+                        key: jax.Array | None) -> Params:
+    """(J/L) Π_{j<=J̃} (I − H(ζ_j)/L) v  — the randomized Neumann product.
+
+    ``hbatches`` is a pytree whose leaves have a leading axis of length J (one
+    minibatch per Neumann term ζ_1..ζ_J; the paper draws them i.i.d.).
+    """
+    J, L = cfg.J, cfg.lip_gy
+    if J == 0:
+        return tree_scale(0.0, v)
+    if cfg.randomize:
+        assert key is not None
+        # The paper writes J̃ ∈ {0..J}; Lemma 2's identity
+        # E[(J/L)Π_{j<=J̃}] = (1/L)Σ_{j=0}^{J-1}(I − H/L)^j requires J̃ uniform
+        # over J values, i.e. {0..J-1} (as in Ghadimi & Wang 2018).
+        jtilde = jax.random.randint(key, (), 0, J)
+    else:
+        jtilde = jnp.asarray(J, dtype=jnp.int32)
+
+    def body(j, acc):
+        batch_j = jax.tree.map(lambda b: b[j], hbatches)
+        hv = hvp_yy(g, x, y, batch_j, acc)
+        new = tree_sub(acc, tree_scale(1.0 / L, hv))
+        # only apply the factor while j < J̃
+        return jax.tree.map(lambda n, a: jnp.where(j < jtilde, n, a), new, acc)
+
+    prod = jax.lax.fori_loop(0, J, body, v)
+    return tree_scale(J / L, prod)
+
+
+def stochastic_hypergrad(problem: BilevelProblem, cfg: HypergradConfig,
+                         x: Params, y: Params, fbatch: Batch, gbatch: Batch,
+                         hbatches: Batch, key: jax.Array | None) -> Params:
+    """∇̃F^{(k)}(x, y; ξ̃) of Eq. (4).
+
+    fbatch: ξ for ∇_x f / ∇_y f;  gbatch: ζ_0 for the Jacobian term;
+    hbatches: ζ_1..ζ_J stacked for the Neumann product.
+    """
+    f, g = problem.upper_loss, problem.lower_loss
+    gx, gy = jax.grad(f, argnums=(0, 1))(x, y, fbatch)
+    ihvp = neumann_inverse_hvp(g, x, y, gy, hbatches, cfg, key)
+    cross = jvp_xy(g, x, y, gbatch, ihvp)
+    return tree_sub(gx, cross)
+
+
+def expected_hypergrad(problem: BilevelProblem, cfg: HypergradConfig,
+                       x: Params, y: Params, batch: Batch) -> Params:
+    """Deterministic ∇̃F (Eq. 5) with the *full-batch* losses and the
+    deterministic J-term Neumann sum (1/L) Σ_{j<J} (I − H/L)^j. Test oracle."""
+    f, g = problem.upper_loss, problem.lower_loss
+    gx, gy = jax.grad(f, argnums=(0, 1))(x, y, batch)
+    L, J = cfg.lip_gy, cfg.J
+
+    def body(j, carry):
+        acc, power = carry  # power = (I - H/L)^j v
+        acc = tree_add(acc, power)
+        hv = hvp_yy(g, x, y, batch, power)
+        power = tree_sub(power, tree_scale(1.0 / L, hv))
+        return acc, power
+
+    acc, _ = jax.lax.fori_loop(0, J, body, (tree_zeros_like(gy), gy))
+    ihvp = tree_scale(1.0 / L, acc)
+    cross = jvp_xy(g, x, y, batch, ihvp)
+    return tree_sub(gx, cross)
+
+
+def exact_hypergrad_dense(problem: BilevelProblem, x: jax.Array, y: jax.Array,
+                          batch: Batch) -> jax.Array:
+    """Exact Eq. (3) via dense Hessian materialization. Small problems only."""
+    f, g = problem.upper_loss, problem.lower_loss
+    yflat, unrav = jax.flatten_util.ravel_pytree(y)
+
+    def g_flat(xx, yf):
+        return g(xx, unrav(yf), batch)
+
+    H = jax.hessian(g_flat, argnums=1)(x, yflat)
+    gy = jax.grad(f, argnums=1)(x, y, batch)
+    gyflat = jax.flatten_util.ravel_pytree(gy)[0]
+    v = jnp.linalg.solve(H, gyflat)
+    cross = jvp_xy(g, x, y, batch, unrav(v))
+    gx = jax.grad(f, argnums=0)(x, y, batch)
+    return tree_sub(gx, cross)

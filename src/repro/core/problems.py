@@ -1,0 +1,142 @@
+"""Bilevel problem containers + the paper's concrete problems.
+
+A :class:`BilevelProblem` bundles the per-node upper objective ``f(x, y, batch)``
+and lower objective ``g(x, y, batch)``. Both are *per-node* scalar losses; the
+global objective is the average over nodes (Eq. 1 of the paper).
+
+Two concrete instances:
+
+* :func:`quadratic_problem` — strongly-convex-quadratic lower level with an
+  analytic ``y*(x)`` and hypergradient, used by the test-suite as an oracle.
+* :func:`logreg_hyperopt` — the paper's §6 experiment (Eq. 19): hyperparameter
+  optimization of an L2-regularized softmax regression, where the upper level
+  learns per-feature regularization strengths ``exp(x_q)`` on a validation set.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Batch = Any
+Params = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class BilevelProblem:
+    """f/g take (x, y, batch) -> scalar. init_* build per-node parameters."""
+
+    upper_loss: Callable[[Params, Params, Batch], jax.Array]
+    lower_loss: Callable[[Params, Params, Batch], jax.Array]
+    init_x: Callable[[jax.Array], Params]
+    init_y: Callable[[jax.Array], Params]
+    # L_{g_y}: Lipschitz constant of ∇_y g, used by the Neumann series (Eq. 4).
+    lip_gy: float = 1.0
+    # μ: strong-convexity constant of g in y (Assumption 2). Diagnostic only.
+    mu: float = 0.1
+
+
+# ---------------------------------------------------------------------------
+# Quadratic bilevel problem with analytic solution (test oracle)
+# ---------------------------------------------------------------------------
+
+def quadratic_problem(dx: int = 4, dy: int = 6, seed: int = 0,
+                      noise: float = 0.0) -> tuple[BilevelProblem, dict]:
+    """g(x,y) = 1/2 y^T A y - y^T (B x + b),  f(x,y) = 1/2 |y - c|^2 + 1/2 |x|^2.
+
+    y*(x) = A^{-1} (B x + b);   ∇F(x) = x + B^T A^{-1} (y*(x) - c).
+    A is SPD with eigenvalues in [mu, L]. ``batch`` is a PRNG key; when
+    ``noise > 0`` gradients are perturbed through a noisy shift of b.
+    """
+    rng = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    Q, _ = jnp.linalg.qr(jax.random.normal(k1, (dy, dy)))
+    mu, L = 0.5, 2.0
+    eigs = jnp.linspace(mu, L, dy)
+    A = Q @ jnp.diag(eigs) @ Q.T
+    B = jax.random.normal(k2, (dy, dx)) / jnp.sqrt(dx)
+    b = jax.random.normal(k3, (dy,))
+    c = jax.random.normal(k4, (dy,))
+
+    def _shift(batch):
+        if noise == 0.0:
+            return jnp.zeros((dy,))
+        return noise * jax.random.normal(batch, (dy,))
+
+    def lower_loss(x, y, batch):
+        bb = b + _shift(batch)
+        return 0.5 * y @ A @ y - y @ (B @ x + bb)
+
+    def upper_loss(x, y, batch):
+        return 0.5 * jnp.sum((y - c) ** 2) + 0.5 * jnp.sum(x ** 2)
+
+    def y_star(x):
+        return jnp.linalg.solve(A, B @ x + b)
+
+    def hypergrad(x):
+        return x + B.T @ jnp.linalg.solve(A, y_star(x) - c)
+
+    def x_star():
+        # ∇F(x*) = 0:  (I + B^T A^-1 A^-1 B... ) solve directly.
+        Ainv = jnp.linalg.inv(A)
+        M = jnp.eye(dx) + B.T @ Ainv @ Ainv @ B
+        rhs = -B.T @ Ainv @ (Ainv @ b - c)
+        return jnp.linalg.solve(M, rhs)
+
+    prob = BilevelProblem(
+        upper_loss=upper_loss,
+        lower_loss=lower_loss,
+        init_x=lambda k: jax.random.normal(k, (dx,)),
+        init_y=lambda k: jax.random.normal(k, (dy,)),
+        lip_gy=float(L),
+        mu=float(mu),
+    )
+    oracle = {"A": A, "B": B, "b": b, "c": c, "y_star": y_star,
+              "hypergrad": hypergrad, "x_star": x_star}
+    return prob, oracle
+
+
+# ---------------------------------------------------------------------------
+# The paper's §6 experiment: logistic-regression hyperparameter optimization
+# ---------------------------------------------------------------------------
+
+def _softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=-1))
+
+
+def logreg_hyperopt(d: int, c: int = 2, lip_gy: float = 10.0,
+                    mu: float = 1e-3) -> BilevelProblem:
+    """Eq. (19): y ∈ R^{d×c} model weights, x ∈ R^d per-feature log-reg-strengths.
+
+    lower g = CE(train) + (1/(c d)) Σ_{p,q} exp(x_q) y_{qp}^2
+    upper f = CE(val)
+
+    ``batch`` is a dict with 'a' (features [n, d]) and 'b' (labels [n]) — the
+    caller supplies a training batch for g and a validation batch for f.
+    """
+
+    def lower_loss(x, y, batch):
+        logits = batch["a"] @ y
+        reg = jnp.mean(jnp.exp(x)[:, None] * y ** 2)
+        return _softmax_xent(logits, batch["b"]) + reg
+
+    def upper_loss(x, y, batch):
+        logits = batch["a"] @ y
+        return _softmax_xent(logits, batch["b"])
+
+    return BilevelProblem(
+        upper_loss=upper_loss,
+        lower_loss=lower_loss,
+        init_x=lambda k: jnp.zeros((d,)),
+        init_y=lambda k: 0.01 * jax.random.normal(k, (d, c)),
+        lip_gy=lip_gy,
+        mu=mu,
+    )
+
+
+def accuracy(y: jax.Array, batch: Batch) -> jax.Array:
+    pred = jnp.argmax(batch["a"] @ y, axis=-1)
+    return jnp.mean((pred == batch["b"]).astype(jnp.float32))

@@ -1,0 +1,129 @@
+"""Communication topologies (Assumption 1 of the paper).
+
+The network of K participants is described by a symmetric doubly-stochastic
+mixing matrix ``W`` with eigenvalues ``1 = |λ1| > |λ2| >= ... >= |λK|``.
+The spectral gap ``1 - λ`` (λ = |λ2|) controls every rate in the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    name: str
+    size: int
+    weights: np.ndarray  # (K, K) mixing matrix W
+
+    @property
+    def spectral_gap(self) -> float:
+        return 1.0 - self.lam
+
+    @property
+    def lam(self) -> float:
+        """λ = |λ2|, the second largest eigenvalue magnitude of W."""
+        eig = np.sort(np.abs(np.linalg.eigvalsh(self.weights)))
+        return float(eig[-2]) if self.size > 1 else 0.0
+
+    def neighbors(self, k: int) -> list[int]:
+        return [j for j in range(self.size) if j != k and self.weights[k, j] > 0]
+
+    def check_assumption1(self, atol: float = 1e-8) -> None:
+        W = self.weights
+        if not np.allclose(W, W.T, atol=atol):
+            raise ValueError(f"{self.name}: W is not symmetric")
+        if not np.allclose(W.sum(axis=1), 1.0, atol=atol):
+            raise ValueError(f"{self.name}: W is not (doubly) stochastic")
+        if self.size > 1 and not self.lam < 1.0 - 1e-12:
+            raise ValueError(f"{self.name}: spectral gap is zero (disconnected?)")
+
+
+def _from_adjacency(name: str, adj: np.ndarray) -> Topology:
+    """Metropolis-Hastings weights from a 0/1 adjacency matrix.
+
+    w_ij = 1 / (1 + max(deg_i, deg_j)) for edges, w_ii = 1 - sum_j w_ij.
+    Always symmetric + doubly stochastic for undirected graphs.
+    """
+    K = adj.shape[0]
+    adj = np.asarray(adj, dtype=bool)
+    np.fill_diagonal(adj, False)
+    deg = adj.sum(axis=1)
+    W = np.zeros((K, K))
+    for i in range(K):
+        for j in range(K):
+            if adj[i, j]:
+                W[i, j] = 1.0 / (1.0 + max(deg[i], deg[j]))
+        W[i, i] = 1.0 - W[i].sum()
+    return Topology(name, K, W)
+
+
+def ring(K: int, self_weight: float = 1.0 / 3.0) -> Topology:
+    """Ring network (the paper's §6 experiments). Tridiagonal-circulant W.
+
+    Default weights: 1/3 self, 1/3 each neighbor (K>2). For K=1 returns [[1]];
+    for K=2 the two nodes average.
+    """
+    if K == 1:
+        return Topology("ring", 1, np.ones((1, 1)))
+    if K == 2:
+        return Topology("ring", 2, np.full((2, 2), 0.5))
+    nb = (1.0 - self_weight) / 2.0
+    W = np.eye(K) * self_weight
+    for k in range(K):
+        W[k, (k - 1) % K] += nb
+        W[k, (k + 1) % K] += nb
+    return Topology("ring", K, W)
+
+
+def complete(K: int) -> Topology:
+    return Topology("complete", K, np.full((K, K), 1.0 / K))
+
+
+def star(K: int) -> Topology:
+    adj = np.zeros((K, K))
+    adj[0, 1:] = 1
+    adj[1:, 0] = 1
+    return _from_adjacency("star", adj)
+
+
+def torus2d(rows: int, cols: int) -> Topology:
+    """2-D torus — matches a TPU ICI mesh slice."""
+    K = rows * cols
+    adj = np.zeros((K, K))
+    for r in range(rows):
+        for c in range(cols):
+            i = r * cols + c
+            for rr, cc in ((r - 1, c), (r + 1, c), (r, c - 1), (r, c + 1)):
+                j = (rr % rows) * cols + (cc % cols)
+                if j != i:
+                    adj[i, j] = 1
+    return _from_adjacency(f"torus{rows}x{cols}", adj)
+
+
+def erdos_renyi(K: int, p: float = 0.5, seed: int = 0) -> Topology:
+    rng = np.random.default_rng(seed)
+    while True:
+        adj = rng.random((K, K)) < p
+        adj = np.triu(adj, 1)
+        adj = adj | adj.T
+        topo = _from_adjacency(f"erdos{K}", adj)
+        if K == 1 or topo.lam < 1.0 - 1e-9:  # connected
+            return topo
+
+
+REGISTRY: dict[str, Callable[[int], Topology]] = {
+    "ring": ring,
+    "complete": complete,
+    "star": star,
+    "erdos": erdos_renyi,
+}
+
+
+def get(name: str, K: int) -> Topology:
+    if name.startswith("torus"):
+        r, c = name[len("torus"):].split("x")
+        return torus2d(int(r), int(c))
+    return REGISTRY[name](K)

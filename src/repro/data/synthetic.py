@@ -1,0 +1,151 @@
+"""Deterministic synthetic datasets.
+
+LIBSVM's a9a/ijcnn1/covtype are unavailable offline, so the paper-repro
+benchmarks use :func:`make_classification` — separable-with-noise Gaussian
+class clusters with matched dimensionality — split 70/30 train/val and dealt
+i.i.d. round-robin to nodes, exactly mirroring the paper's §6 protocol.
+
+LM token streams are Zipf-distributed with a deterministic PRNG; modality
+stubs produce the frame/patch embeddings that replace the (stubbed) audio conv
+frontend and VQ/ViT vision tokenizers.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Classification (paper §6)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Dataset:
+    a: np.ndarray  # [n, d] features
+    b: np.ndarray  # [n] int labels
+
+    @property
+    def n(self) -> int:
+        return self.a.shape[0]
+
+
+def make_classification(n: int = 8_000, d: int = 100, c: int = 2,
+                        noise: float = 1.2, seed: int = 0) -> Dataset:
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(c, d))
+    centers /= np.linalg.norm(centers, axis=1, keepdims=True)
+    labels = rng.integers(0, c, size=n)
+    feats = centers[labels] + noise * rng.normal(size=(n, d))
+    # mimic libsvm-style feature scaling
+    feats /= np.abs(feats).max()
+    return Dataset(feats.astype(np.float32), labels.astype(np.int32))
+
+
+def train_val_split(ds: Dataset, val_frac: float = 0.3, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(ds.n)
+    n_val = int(ds.n * val_frac)
+    val, tr = perm[:n_val], perm[n_val:]
+    return Dataset(ds.a[tr], ds.b[tr]), Dataset(ds.a[val], ds.b[val])
+
+
+def shard_to_nodes(ds: Dataset, K: int) -> list[Dataset]:
+    """Random, even, i.i.d. split to K participants (the paper's setting)."""
+    per = ds.n // K
+    return [Dataset(ds.a[k * per:(k + 1) * per], ds.b[k * per:(k + 1) * per])
+            for k in range(K)]
+
+
+class NodeSampler:
+    """Samples per-step {'f','g','h'} bilevel batches across K node datasets.
+
+    f: validation batch, g: training batch (ζ0), h: J fresh training batches
+    (ζ_1..ζ_J) — faithful to the paper's i.i.d. Neumann sampling.
+    """
+
+    def __init__(self, train_nodes, val_nodes, batch: int, J: int, seed: int = 0):
+        self.tr, self.va = train_nodes, val_nodes
+        self.batch, self.J = batch, J
+        self.rng = np.random.default_rng(seed)
+
+    def _draw(self, ds: Dataset, n: int):
+        idx = self.rng.integers(0, ds.n, size=n)
+        return {"a": jnp.asarray(ds.a[idx]), "b": jnp.asarray(ds.b[idx])}
+
+    def __call__(self, _key=None):
+        K, B, J = len(self.tr), self.batch, self.J
+        f = [self._draw(self.va[k], B) for k in range(K)]
+        g = [self._draw(self.tr[k], B) for k in range(K)]
+        h = [[self._draw(self.tr[k], B) for _ in range(J)] for k in range(K)]
+        stack = lambda xs: jax.tree.map(lambda *t: jnp.stack(t), *xs)
+        return {"f": stack(f), "g": stack(g),
+                "h": stack([stack(hk) for hk in h])}
+
+    def eval_batch(self, n: int = 2048):
+        a = np.concatenate([d.a for d in self.va])[:n]
+        b = np.concatenate([d.b for d in self.va])[:n]
+        return {"a": jnp.asarray(a), "b": jnp.asarray(b)}
+
+
+# ---------------------------------------------------------------------------
+# LM token streams + modality stubs
+# ---------------------------------------------------------------------------
+
+def lm_batch(key, vocab: int, batch: int, seq: int, *, zipf_a: float = 1.2):
+    """Zipf-ish token stream: tokens[t+1] depends weakly on tokens[t] so the
+    model has signal to fit. Returns {'tokens','labels'}."""
+    k1, k2 = jax.random.split(key)
+    # heavy-tailed marginal via exponential race
+    u = jax.random.exponential(k1, (batch, seq + 1))
+    ranks = jnp.clip((u * vocab ** (1.0 / zipf_a)) ** zipf_a, 0, vocab - 1)
+    toks = ranks.astype(jnp.int32)
+    shift = jax.random.randint(k2, (batch, 1), 0, 7)
+    toks = (toks + shift) % vocab
+    return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+
+
+def audio_stub(key, batch: int, frames: int, d_model: int, dtype=jnp.float32):
+    """Precomputed conv-frontend frame embeddings (whisper stub)."""
+    return 0.02 * jax.random.normal(key, (batch, frames, d_model), dtype)
+
+
+def vision_stub(key, batch: int, n_tokens: int, d_model: int, seq: int,
+                dtype=jnp.float32):
+    """Precomputed patch-token embeddings + positions (chameleon stub)."""
+    k1, k2 = jax.random.split(key)
+    emb = 0.02 * jax.random.normal(k1, (batch, n_tokens, d_model), dtype)
+    pos = jnp.tile(jnp.arange(n_tokens, dtype=jnp.int32)[None], (batch, 1))
+    return emb, pos
+
+
+def shard_to_nodes_noniid(ds: Dataset, K: int, alpha: float = 0.3,
+                          seed: int = 0) -> list[Dataset]:
+    """Dirichlet label-skewed split (the classic non-iid benchmark protocol).
+
+    The paper assumes i.i.d. participants; this split powers the robustness
+    ablation in benchmarks/fig_noniid.py. ``alpha`` → ∞ recovers i.i.d.;
+    small alpha concentrates each class on few nodes."""
+    rng = np.random.default_rng(seed)
+    classes = np.unique(ds.b)
+    per = ds.n // K
+    buckets: list[list[int]] = [[] for _ in range(K)]
+    for c in classes:
+        idx = np.flatnonzero(ds.b == c)
+        rng.shuffle(idx)
+        props = rng.dirichlet([alpha] * K)
+        # cap so every node ends up with exactly n/K samples
+        splits = (np.cumsum(props) * len(idx)).astype(int)[:-1]
+        for k, part in enumerate(np.split(idx, splits)):
+            buckets[k].extend(part.tolist())
+    out = []
+    for k in range(K):
+        take = buckets[k]
+        rng.shuffle(take)
+        # pad/trim to equal size with replacement for even loads
+        if len(take) < per:
+            take = take + rng.choice(ds.n, per - len(take)).tolist()
+        out.append(Dataset(ds.a[take[:per]], ds.b[take[:per]]))
+    return out

@@ -1,0 +1,9 @@
+# TPU-target Pallas kernels for the substrate's compute hot-spots
+# (the paper itself has no kernel-level contribution — see DESIGN.md §3).
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ops import attention, on_tpu, rglru
+from repro.kernels.ref import attention_ref, rglru_ref
+from repro.kernels.rglru_scan import rglru_scan
+
+__all__ = ["attention", "attention_ref", "flash_attention", "on_tpu",
+           "rglru", "rglru_ref", "rglru_scan"]

@@ -1,0 +1,39 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``use_pallas`` policy: on TPU backends the Pallas kernels run compiled; on CPU
+they run in interpret mode (Python evaluation of the kernel body) — correct but
+slow, so the model code defaults to the chunked-jnp paths off-TPU and these
+wrappers are exercised by the kernel test-suite and TPU deployments.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.ref import attention_ref, rglru_ref
+from repro.kernels.rglru_scan import rglru_scan
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def attention(q, k, v, *, causal: bool = True, window: int | None = None,
+              force_pallas: bool = False, interpret: bool | None = None):
+    """Dispatch: Pallas flash attention on TPU, jnp reference elsewhere.
+
+    Layout: q [B, H, S, Dh], k/v [B, Hkv, S, Dh]."""
+    if on_tpu() or force_pallas:
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               interpret=(not on_tpu()) if interpret is None
+                               else interpret)
+    return attention_ref(q, k, v, causal=causal, window=window)
+
+
+def rglru(a, x, *, force_pallas: bool = False, interpret: bool | None = None):
+    """Dispatch: Pallas RG-LRU scan on TPU, lax.scan reference elsewhere."""
+    if on_tpu() or force_pallas:
+        return rglru_scan(a, x, interpret=(not on_tpu()) if interpret is None
+                          else interpret)
+    return rglru_ref(a, x)

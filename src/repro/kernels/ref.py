@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for the Pallas kernels (full-softmax, no blocking)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None):
+    """q: [B, H, Sq, Dh]; k/v: [B, Hkv, Skv, Dh] -> [B, H, Sq, Dh]."""
+    B, H, Sq, Dh = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Hkv, G, Sq, Dh).astype(jnp.float32) * Dh ** -0.5
+    kf, vf = k.astype(jnp.float32), v.astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kf)
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, vf)
+    return o.reshape(B, H, Sq, Dh).astype(q.dtype)
+
+
+def rglru_ref(a, x, h0=None):
+    """Linear recurrence h_t = a_t * h_{t-1} + x_t. a/x: [B, S, R]."""
+    B, S, R = a.shape
+    h0 = jnp.zeros((B, R), a.dtype) if h0 is None else h0
+
+    def step(h, xs):
+        a_t, x_t = xs
+        h = a_t * h + x_t
+        return h, h
+
+    _, hs = jax.lax.scan(step, h0, (a.transpose(1, 0, 2),
+                                    x.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)
+
+
+def wkv6_ref(r, k, v, w, u):
+    """RWKV-6 WKV oracle. r/k/v/w: [BH, S, Dh]; u: [BH, Dh] -> y [BH, S, Dh].
+
+        y_t = r_t · (S_t + (u ⊙ k_t) v_tᵀ);   S_{t+1} = diag(w_t) S_t + k_t v_tᵀ
+    """
+    BH, S, Dh = r.shape
+    rf, kf, vf, wf, uf = (t.astype(jnp.float32) for t in (r, k, v, w, u))
+
+    def step(St, xs):
+        r_t, k_t, v_t, w_t = xs                       # [BH, Dh]
+        kv = k_t[..., :, None] * v_t[..., None, :]    # [BH, Dh, Dh]
+        y = jnp.einsum("bk,bkv->bv", r_t, St + uf[..., :, None] * kv)
+        St = w_t[..., :, None] * St + kv
+        return St, y
+
+    xs = tuple(t.transpose(1, 0, 2) for t in (rf, kf, vf, wf))
+    _, ys = jax.lax.scan(step, jnp.zeros((BH, Dh, Dh), jnp.float32), xs)
+    return ys.transpose(1, 0, 2).astype(r.dtype)

@@ -1,0 +1,74 @@
+"""RWKV-6 WKV recurrence (TPU Pallas): matrix-state scan with bonus term.
+
+    y_t = r_t · (S_t + (u ⊙ k_t) v_tᵀ)
+    S_{t+1} = diag(w_t) S_t + k_t v_tᵀ
+
+TPU-native design: the per-head state is a [Dh, Dh] matrix that lives in VMEM
+scratch across sequence chunks — grid (B·H, n_chunks) with the chunk dim
+innermost (sequential on TPU). Within a chunk the time loop is a fori_loop of
+rank-1 updates + [Dh]·[Dh,Dh] contractions; Dh ∈ {64, 128} keeps every
+operand MXU/VPU aligned. This is the training-time replacement for the pure
+``lax.scan`` in repro.models.rwkv6 (which remains the CPU / oracle path).
+
+Validated on CPU with interpret=True against repro.kernels.ref.wkv6_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, o_ref, s_scr, *,
+                chunk: int):
+    cj = pl.program_id(1)
+
+    @pl.when(cj == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr)
+
+    r = r_ref[0].astype(jnp.float32)   # [chunk, Dh]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    w = w_ref[0].astype(jnp.float32)
+    u = u_ref[0].astype(jnp.float32)   # [1, Dh] bonus (broadcast over k-dim)
+    out = jnp.zeros_like(v)
+
+    def body(t, carry):
+        S, out = carry                             # S: [Dh(k), Dh(v)]
+        kv = k[t][:, None] * v[t][None, :]         # rank-1 update
+        y = jnp.dot(r[t][None, :], S + u[0][:, None] * kv,
+                    preferred_element_type=jnp.float32)[0]
+        S = w[t][:, None] * S + kv
+        out = jax.lax.dynamic_update_index_in_dim(out, y, t, 0)
+        return S, out
+
+    S, out = jax.lax.fori_loop(0, chunk, body, (s_scr[...], out))
+    s_scr[...] = S
+    o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def wkv6_scan(r, k, v, w, u, *, chunk: int = 128, interpret: bool = False):
+    """r/k/v/w: [BH, S, Dh] (batch×heads flattened); w = per-step decay in
+    (0,1); u: [BH, Dh] bonus. Returns y [BH, S, Dh]."""
+    BH, S, Dh = r.shape
+    chunk = min(chunk, S)
+    assert S % chunk == 0, (S, chunk)
+    grid = (BH, S // chunk)
+    u3 = u[:, None, :]  # [BH, 1, Dh]
+
+    io_spec = pl.BlockSpec((1, chunk, Dh), lambda b, c: (b, c, 0))
+    return pl.pallas_call(
+        functools.partial(_wkv_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[io_spec, io_spec, io_spec, io_spec,
+                  pl.BlockSpec((1, 1, Dh), lambda b, c: (b, 0, 0))],
+        out_specs=io_spec,
+        out_shape=jax.ShapeDtypeStruct((BH, S, Dh), r.dtype),
+        scratch_shapes=[pltpu.VMEM((Dh, Dh), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u3)

@@ -1,0 +1,48 @@
+"""CLI batched-serving driver (smoke-scale on CPU).
+
+  python -m repro.launch.serve --arch rwkv6-1.6b --reduced --requests 6
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get
+from repro.models import init_params
+from repro.serve import ServeEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--capacity", type=int, default=64)
+    ap.add_argument("--max-batch", type=int, default=4)
+    args = ap.parse_args()
+
+    spec = get(args.arch)
+    cfg = spec.reduced() if args.reduced else spec.config
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServeEngine(cfg, params, capacity=args.capacity,
+                      max_batch=args.max_batch)
+    rng = np.random.default_rng(0)
+    for i in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab, size=rng.integers(3, 10))
+        eng.submit(prompt, max_new_tokens=args.max_new)
+    t0 = time.time()
+    results = eng.run()
+    dt = time.time() - t0
+    total_toks = sum(len(v) for v in results.values())
+    for rid, toks in sorted(results.items()):
+        print(f"req {rid}: {toks}")
+    print(f"{total_toks} tokens in {dt:.2f}s "
+          f"({total_toks / dt:.1f} tok/s, {args.requests} requests)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,85 @@
+"""CLI trainer: decentralized bilevel (MDBO/VRDBO) or single-level GT-SGD.
+
+On CPU this runs smoke-scale (reduced configs, tiny batches); on a TPU pod the
+same code paths run the full configs via the production mesh. Examples:
+
+  python -m repro.launch.train --arch smollm-360m --reduced --steps 20
+  python -m repro.launch.train --arch rwkv6-1.6b --reduced --algo vrdbo
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import save
+from repro.configs import get
+from repro.core.common import HParams, consensus_error, replicate
+from repro.models import loss_fn
+from repro.train import (TrainerConfig, make_mix, make_step_batch,
+                         make_step_fns)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true",
+                    help="smoke-scale model variant (CPU)")
+    ap.add_argument("--algo", default="mdbo",
+                    choices=["mdbo", "vrdbo", "gt_sgd"])
+    ap.add_argument("--mix", default="ring", choices=["ring", "dense"])
+    ap.add_argument("--nodes", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=2, help="per-node batch")
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--J", type=int, default=2)
+    ap.add_argument("--eta", type=float, default=0.1)
+    ap.add_argument("--beta1", type=float, default=0.05)
+    ap.add_argument("--beta2", type=float, default=0.5)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--log-every", type=int, default=1)
+    args = ap.parse_args()
+
+    spec = get(args.arch)
+    cfg = spec.reduced() if args.reduced else spec.config
+    tc = TrainerConfig(algo=args.algo, J=args.J, mix=args.mix,
+                       hp=HParams(eta=args.eta, beta1=args.beta1,
+                                  beta2=args.beta2))
+    K = args.nodes
+    problem, init_fn, step_fn = make_step_fns(cfg, tc)
+    mix = make_mix(tc, K)
+
+    key = jax.random.PRNGKey(0)
+    X0 = replicate(problem.init_x(key), K)
+    Y0 = replicate(problem.init_y(key), K)
+    key, kb = jax.random.split(key)
+    batch = make_step_batch(cfg, tc, kb, K, args.batch, args.seq)
+    state = init_fn(mix, X0, Y0, batch, jax.random.split(kb, K))
+    step_jit = jax.jit(partial(step_fn, mix))
+
+    print(f"arch={cfg.name} algo={args.algo} K={K} "
+          f"params/node={sum(x.size for x in jax.tree.leaves(Y0)) // K:,}")
+    t0 = time.time()
+    for t in range(1, args.steps + 1):
+        key, kb = jax.random.split(key)
+        batch = make_step_batch(cfg, tc, kb, K, args.batch, args.seq)
+        state = step_jit(state, batch, jax.random.split(kb, K))
+        if t % args.log_every == 0:
+            y0 = jax.tree.map(lambda a: a[0], state.y)
+            b0 = jax.tree.map(lambda a: a[0], batch["g"])
+            loss = float(loss_fn(cfg, y0, b0))
+            cx = float(consensus_error(state.x))
+            print(f"step {t:4d} loss={loss:.4f} consensus_x={cx:.2e} "
+                  f"x̄={float(jnp.mean(state.x)):+.3f} "
+                  f"({time.time() - t0:.1f}s)", flush=True)
+    if args.ckpt_dir:
+        path = save(args.ckpt_dir, args.steps,
+                    {"x": state.x, "y": state.y})
+        print("saved", path)
+
+
+if __name__ == "__main__":
+    main()

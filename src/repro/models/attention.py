@@ -1,0 +1,173 @@
+"""Attention: GQA projections, chunked softmax attention, KV caches.
+
+The training/prefill path is a *q-chunked* attention (lax.scan over query
+blocks) so that the score matrix never materializes at [S, S] — the jnp
+analogue of the Pallas flash kernel in ``repro.kernels.flash_attention`` (which
+is the TPU-target implementation; the chunked path is what dry-runs lower).
+
+Cache layouts (per layer, stacked on a leading L axis by the model):
+  * full cache: k/v [B, S, Hkv, Dh] — decode writes at ``idx`` and attends to
+    positions ≤ idx (optionally windowed).
+  * ring cache (sliding window): capacity W, slot = idx mod W. RoPE is applied
+    *before* caching so slots carry absolute positions.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense, init_dense, rope
+
+NEG_INF = -2.0 ** 30
+
+
+def init_attn(cfg, key, d_model: int | None = None):
+    D = d_model or cfg.d_model
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    pd = cfg.param_dtype
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(k1, D, H * Dh, pd, bias=cfg.qkv_bias),
+        "wk": init_dense(k2, D, Hkv * Dh, pd, bias=cfg.qkv_bias),
+        "wv": init_dense(k3, D, Hkv * Dh, pd, bias=cfg.qkv_bias),
+        "wo": init_dense(k4, H * Dh, D, pd, scale=(H * Dh) ** -0.5),
+    }
+
+
+def qkv(cfg, p, x, kv_x=None):
+    """Project to q [B,S,H,Dh], k/v [B,Skv,Hkv,Dh]."""
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    kv_x = x if kv_x is None else kv_x
+    B, S = x.shape[:2]
+    Skv = kv_x.shape[1]
+    q = dense(p["wq"], x, cfg.dtype).reshape(B, S, H, Dh)
+    k = dense(p["wk"], kv_x, cfg.dtype).reshape(B, Skv, Hkv, Dh)
+    v = dense(p["wv"], kv_x, cfg.dtype).reshape(B, Skv, Hkv, Dh)
+    return q, k, v
+
+
+def sdpa(q, k, v, *, q_positions, k_positions, causal: bool,
+         window: int | None, kv_len=None, chunk: int = 512):
+    """Chunked scaled-dot-product attention with GQA head grouping.
+
+    q: [B, Sq, H, Dh];  k/v: [B, Skv, Hkv, Dh]
+    q_positions [Sq], k_positions [Skv] — absolute positions for masking.
+    kv_len: optional dynamic count of valid cache slots.
+    """
+    B, Sq, H, Dh = q.shape
+    Skv, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    scale = Dh ** -0.5
+    qg = (q * scale).reshape(B, Sq, Hkv, G, Dh)
+
+    def block(qb, qpos):
+        # qb [B, C, Hkv, G, Dh] -> scores [B, C, Hkv, G, Skv]
+        s = jnp.einsum("bchgd,bkhd->bchgk", qb, k).astype(jnp.float32)
+        valid = jnp.ones((qpos.shape[0], Skv), dtype=bool)
+        if causal:
+            valid &= k_positions[None, :] <= qpos[:, None]
+        if window is not None:
+            valid &= k_positions[None, :] > qpos[:, None] - window
+        if kv_len is not None:
+            valid &= (jnp.arange(Skv) < kv_len)[None, :]
+        # additive bias (not jnp.where on s): keeps the autodiff residual at
+        # [C, Skv] instead of a broadcast [B, C, H, G, Skv] pred tensor.
+        bias = jnp.where(valid, 0.0, NEG_INF).astype(jnp.float32)
+        s = s + bias[None, :, None, None, :]
+        p = jax.nn.softmax(s, axis=-1).astype(qb.dtype)
+        return jnp.einsum("bchgk,bkhd->bchgd", p, v)
+
+    if Sq <= chunk:
+        out = block(qg, q_positions)
+    else:
+        # pad Sq up to a chunk multiple (e.g. whisper's 1500 encoder frames);
+        # padded rows are computed then sliced off.
+        pad = (-Sq) % chunk
+        if pad:
+            qg = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+            q_positions = jnp.pad(q_positions, (0, pad))
+        Sp = Sq + pad
+        nc = Sp // chunk
+        qc = qg.reshape(B, nc, chunk, Hkv, G, Dh).transpose(1, 0, 2, 3, 4, 5)
+        pc = q_positions.reshape(nc, chunk)
+
+        def body(_, xs):
+            qb, qpos = xs
+            return None, block(qb, qpos)
+
+        # checkpoint: one chunk's score/prob matrices live at a time during
+        # the backward pass (flash-attention memory behaviour for the jnp path)
+        _, oc = jax.lax.scan(jax.checkpoint(body), None, (qc, pc))
+        out = oc.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sp, Hkv, G, Dh)
+        out = out[:, :Sq]
+    return out.reshape(B, Sq, H, Dh)
+
+
+def self_attention(cfg, p, x, positions, *, causal=True, window=None,
+                   chunk: int = 512):
+    """Training / prefill self-attention (no cache)."""
+    q, k, v = qkv(cfg, p, x)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    out = sdpa(q, k, v, q_positions=positions, k_positions=positions,
+               causal=causal, window=window, chunk=chunk)
+    B, S = x.shape[:2]
+    return dense(p["wo"], out.reshape(B, S, -1), cfg.dtype)
+
+
+def cross_attention(cfg, p, x, kv_x=None, kv_cache=None, kv_len=None):
+    """Cross-attention: kv either computed from ``kv_x`` (encoder output) or
+    taken from a precomputed cache {'k','v'}."""
+    B, S = x.shape[:2]
+    H, Hkv, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = dense(p["wq"], x, cfg.dtype).reshape(B, S, H, Dh)
+    if kv_cache is not None:
+        k, v = kv_cache["k"].astype(cfg.dtype), kv_cache["v"].astype(cfg.dtype)
+    else:
+        Skv = kv_x.shape[1]
+        k = dense(p["wk"], kv_x, cfg.dtype).reshape(B, Skv, Hkv, Dh)
+        v = dense(p["wv"], kv_x, cfg.dtype).reshape(B, Skv, Hkv, Dh)
+    Skv = k.shape[1]
+    out = sdpa(q, k, v, q_positions=jnp.zeros((S,), jnp.int32),
+               k_positions=jnp.zeros((Skv,), jnp.int32), causal=False,
+               window=None, kv_len=kv_len)
+    return dense(p["wo"], out.reshape(B, S, -1), cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# KV caches
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg, batch: int, capacity: int, dtype=None):
+    Hkv, Dh = cfg.n_kv_heads, cfg.head_dim
+    dt = dtype or cfg.dtype
+    shape = (batch, capacity, Hkv, Dh)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def decode_self_attention(cfg, p, x, cache, idx, *, window=None):
+    """One-token decode. x: [B, 1, D]; cache k/v [B, C, Hkv, Dh]; idx: scalar
+    absolute position of the new token. Returns (out [B,1,D], new cache).
+
+    If ``window`` is set the cache is a ring buffer of capacity C (== window);
+    otherwise C is the full context capacity and idx < C.
+    """
+    B = x.shape[0]
+    q, k_new, v_new = qkv(cfg, p, x)
+    pos = jnp.full((1,), idx, jnp.int32)
+    q = rope(q, pos, cfg.rope_theta)
+    k_new = rope(k_new, pos, cfg.rope_theta)
+
+    C = cache["k"].shape[1]
+    slot = idx % C if window is not None else idx
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new.astype(cache["k"].dtype),
+                                     (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new.astype(cache["v"].dtype),
+                                     (0, slot, 0, 0))
+    kv_len = jnp.minimum(idx + 1, C)
+    # RoPE is baked into cached keys, so masking only needs slot validity.
+    out = sdpa(q, k.astype(cfg.dtype), v.astype(cfg.dtype),
+               q_positions=pos, k_positions=jnp.zeros((C,), jnp.int32),
+               causal=False, window=None, kv_len=kv_len)
+    out = dense(p["wo"], out.reshape(B, 1, -1), cfg.dtype)
+    return out, {"k": k, "v": v}

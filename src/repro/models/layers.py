@@ -1,0 +1,116 @@
+"""Primitive layers: norms, RoPE, projections, MLPs. Pure-pytree parameters."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_dense(key, d_in: int, d_out: int, dtype, scale: float | None = None,
+               bias: bool = False):
+    scale = scale if scale is not None else d_in ** -0.5
+    w = (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+    if bias:
+        return {"w": w, "b": jnp.zeros((d_out,), dtype)}
+    return {"w": w}
+
+
+def dense(p, x, dtype):
+    y = jnp.einsum("...d,df->...f", x, p["w"].astype(dtype))
+    if "b" in p:
+        y = y + p["b"].astype(dtype)
+    return y
+
+
+def rms_norm(x, w, eps: float = 1e-6):
+    # stats in f32, tensors stay in the compute dtype — avoids materializing a
+    # full f32 copy of x (XLA hoists whole-carry converts out of scan loops,
+    # which at [L, B, S, D] doubles the remat carry memory).
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    inv = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * inv * (1.0 + w.astype(x.dtype))
+
+
+def layer_norm(x, w, b, eps: float = 1e-5):
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(dtype)
+
+
+def make_norm_params(cfg, d: int):
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.zeros((d,), cfg.param_dtype)}
+    return {"scale": jnp.ones((d,), cfg.param_dtype),
+            "bias": jnp.zeros((d,), cfg.param_dtype)}
+
+
+def apply_norm(cfg, p, x):
+    if cfg.norm == "rmsnorm":
+        return rms_norm(x, p["scale"])
+    return layer_norm(x, p["scale"], p["bias"])
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, Dh]; positions: broadcastable to [..., S]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # [..., S, half]
+    sin, cos = jnp.sin(ang)[..., None, :], jnp.cos(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(cfg, key):
+    k1, k2, k3 = jax.random.split(key, 3)
+    D, F = cfg.d_model, cfg.d_ff
+    pd = cfg.param_dtype
+    if cfg.act == "swiglu":
+        return {"wi": init_dense(k1, D, F, pd)["w"],
+                "wg": init_dense(k2, D, F, pd)["w"],
+                "wo": init_dense(k3, F, D, pd, scale=F ** -0.5)["w"]}
+    return {"wi": init_dense(k1, D, F, pd)["w"],
+            "wo": init_dense(k3, F, D, pd, scale=F ** -0.5)["w"]}
+
+
+def mlp(cfg, p, x):
+    dt = cfg.dtype
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("...d,df->...f", x, p["wg"].astype(dt)))
+        h = h * jnp.einsum("...d,df->...f", x, p["wi"].astype(dt))
+    else:
+        h = jax.nn.gelu(jnp.einsum("...d,df->...f", x, p["wi"].astype(dt)))
+    return jnp.einsum("...f,fd->...d", h, p["wo"].astype(dt))
+
+
+# ---------------------------------------------------------------------------
+# Embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def init_embed(cfg, key):
+    emb = (jax.random.normal(key, (cfg.vocab, cfg.d_model)) *
+           cfg.d_model ** -0.5).astype(cfg.param_dtype)
+    return {"table": emb}
+
+
+def embed(cfg, p, tokens):
+    return p["table"].astype(cfg.dtype)[tokens]
+
+
+def unembed(cfg, p, x):
+    logits = jnp.einsum("...d,vd->...v", x, p["table"].astype(cfg.dtype))
+    if cfg.logits_softcap > 0:
+        c = cfg.logits_softcap
+        logits = c * jnp.tanh(logits / c)
+    return logits

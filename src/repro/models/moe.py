@@ -1,0 +1,102 @@
+"""Top-k routed Mixture-of-Experts with capacity-based scatter dispatch.
+
+Dispatch is sort-free: position-in-expert comes from a cumulative sum over the
+flattened (token, choice) assignments; tokens beyond expert capacity are
+dropped (standard GShard/Switch behaviour, capacity_factor controls the slack).
+Expert weights carry a leading E axis that the sharding rules place on the
+``model`` mesh axis (expert parallelism) when E divides the axis, falling back
+to tensor-parallel experts (d_ff sharding) otherwise (e.g. grok's E=8 on a
+16-wide axis).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense
+from repro.sharding.hints import constrain
+
+
+def init_moe(cfg, key):
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    pd = cfg.param_dtype
+    kr, k1, k2, k3 = jax.random.split(key, 4)
+    return {
+        "router": init_dense(kr, D, E, pd)["w"],
+        "wi": (jax.random.normal(k1, (E, D, F)) * D ** -0.5).astype(pd),
+        "wg": (jax.random.normal(k2, (E, D, F)) * D ** -0.5).astype(pd),
+        "wo": (jax.random.normal(k3, (E, F, D)) * F ** -0.5).astype(pd),
+    }
+
+
+def moe_mlp(cfg, p, x):
+    """x: [B, S, D] -> (out [B, S, D], aux losses dict).
+
+    Grouped dispatch (GShard-style): tokens are split into ``cfg.moe_groups``
+    groups with per-group capacity. With the group dim sharded over ``data``,
+    scatter/gather stay shard-local and the group→expert reshape lowers to an
+    all-to-all — without groups SPMD cannot partition the global scatter and
+    falls back to full replication (measured 15 TB/device of collectives at
+    phi3.5 scale; see EXPERIMENTS.md §Perf P2)."""
+    B, S, D = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    N = B * S
+    G = max(int(getattr(cfg, "moe_groups", 1)), 1)
+    if N % G:
+        G = 1
+    n = N // G
+    flat = x.reshape(G, n, D)
+
+    logits = jnp.einsum("gnd,de->gne", flat,
+                        p["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)                      # [G, n, E]
+    top_w, top_e = jax.lax.top_k(probs, K)                       # [G, n, K]
+    top_w = top_w / jnp.sum(top_w, axis=-1, keepdims=True)
+
+    # --- per-group capacity + position-in-expert ----------------------------
+    C = max(int(cfg.capacity_factor * n * K / E + 0.999), 4)
+    assign = top_e.reshape(G, n * K)                             # [G, n*K]
+    onehot = jax.nn.one_hot(assign, E, dtype=jnp.int32)          # [G, n*K, E]
+    pos = jnp.cumsum(onehot, axis=1) - 1
+    pos = jnp.sum(pos * onehot, axis=-1)                         # [G, n*K]
+    keep = pos < C
+    dest = jnp.where(keep, assign * C + pos, E * C)              # overflow
+
+    # --- dispatch (shard-local scatter per group) ----------------------------
+    rep = jnp.repeat(flat, K, axis=1)                            # [G, n*K, D]
+
+    def scatter_group(r, d):
+        return jnp.zeros((E * C + 1, D), x.dtype).at[d].set(r)
+
+    buf = jax.vmap(scatter_group)(rep, dest)                     # [G, E*C+1, D]
+    expert_in = buf[:, :E * C].reshape(G, E, C, D)
+    # group→expert transpose: lowers to all-to-all under data×model sharding.
+    # Keep G as an explicit dim — merging a sharded dim (reshape to G*C)
+    # forces SPMD into full rematerialization.
+    expert_in = constrain(expert_in.transpose(1, 0, 2, 3), "moe_egcd")
+
+    # --- expert FFN (swiglu) ----------------------------------------------------
+    dt = x.dtype
+    h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", expert_in,
+                               p["wg"].astype(dt)))
+    h = h * jnp.einsum("egcd,edf->egcf", expert_in, p["wi"].astype(dt))
+    h = constrain(h, "moe_egcf")
+    expert_out = constrain(
+        jnp.einsum("egcf,efd->egcd", h, p["wo"].astype(dt)), "moe_egcd")
+
+    # --- combine (all-to-all back, then shard-local gather) ----------------------
+    back = expert_out.transpose(1, 0, 2, 3)                      # [G, E, C, D]
+    padded = jnp.concatenate(
+        [back.reshape(G, E * C, D), jnp.zeros((G, 1, D), dt)], axis=1)
+    gathered = jax.vmap(lambda pb, d: jnp.take(pb, d, axis=0))(
+        padded, dest)                                            # [G, n*K, D]
+    weights = (top_w.reshape(G, n * K) * keep).astype(dt)
+    out = jnp.sum((gathered * weights[..., None]).reshape(G, n, K, D), axis=2)
+
+    # --- aux losses (Switch-style load balance + router z-loss) -----------------
+    frac_tokens = jnp.mean(
+        jax.nn.one_hot(top_e[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    frac_probs = jnp.mean(probs, axis=(0, 1))
+    aux_lb = E * jnp.sum(frac_tokens * frac_probs)
+    z_loss = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+    return out.reshape(B, S, D), {"moe_lb": aux_lb, "moe_z": z_loss}

@@ -1,0 +1,113 @@
+"""RecurrentGemma building blocks: causal conv1d + RG-LRU recurrence.
+
+RG-LRU (Real-Gated Linear Recurrent Unit, De et al. 2024):
+
+    r_t = σ(W_a x_t + b_a)                  recurrence gate
+    i_t = σ(W_x x_t + b_x)                  input gate
+    a_t = exp(−c · softplus(Λ) ⊙ r_t)       c = 8
+    h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+The prefill path is a ``jax.lax.scan`` over time (the TPU-target Pallas kernel
+lives in repro.kernels.rglru_scan); decode is a single recurrence step with a
+rolling conv window.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense
+
+C_RGLRU = 8.0
+
+
+def init_recurrent_block(cfg, key):
+    D = cfg.d_model
+    R = cfg.lru_width or D
+    pd = cfg.param_dtype
+    ks = jax.random.split(key, 6)
+    lam = jax.random.uniform(ks[5], (R,), minval=0.43, maxval=0.85)
+    # softplus^{-1} so that a^(1/c) starts in [0.9, 0.999]-ish
+    lam = jnp.log(jnp.exp(-jnp.log(lam)) - 1.0)
+    return {
+        "w_in_x": init_dense(ks[0], D, R, pd)["w"],     # recurrent branch
+        "w_in_g": init_dense(ks[1], D, R, pd)["w"],     # gate branch
+        "conv_w": (jax.random.normal(ks[2], (cfg.conv1d_width, R)) *
+                   cfg.conv1d_width ** -0.5).astype(pd),
+        "conv_b": jnp.zeros((R,), pd),
+        "w_a": init_dense(ks[3], R, R, pd, bias=True),
+        "w_i": init_dense(ks[4], R, R, pd, bias=True),
+        "lam": lam.astype(pd),
+        "w_out": init_dense(jax.random.fold_in(key, 7), R, D, pd,
+                            scale=R ** -0.5)["w"],
+    }
+
+
+def _gates(p, x, dtype):
+    r = jax.nn.sigmoid(jnp.einsum("...r,rs->...s", x, p["w_a"]["w"].astype(dtype))
+                       + p["w_a"]["b"].astype(dtype))
+    i = jax.nn.sigmoid(jnp.einsum("...r,rs->...s", x, p["w_i"]["w"].astype(dtype))
+                       + p["w_i"]["b"].astype(dtype))
+    log_a = -C_RGLRU * jax.nn.softplus(p["lam"].astype(jnp.float32)) * \
+        r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)).astype(dtype) * \
+        (i * x)
+    return a.astype(dtype), gated_in
+
+
+def causal_conv1d(p, x, dtype):
+    """Depthwise causal conv. x: [B, S, R]."""
+    w = p["conv_w"].astype(dtype)  # [W, R]
+    W = w.shape[0]
+    pads = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = sum(pads[:, i:i + x.shape[1], :] * w[i] for i in range(W))
+    return out + p["conv_b"].astype(dtype)
+
+
+def recurrent_block(cfg, p, x, h0=None):
+    """Train/prefill. x: [B, S, D] -> (y [B, S, D], final state)."""
+    dt = cfg.dtype
+    B, S, D = x.shape
+    R = p["lam"].shape[0]
+    gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x, p["w_in_g"].astype(dt)))
+    u = jnp.einsum("bsd,dr->bsr", x, p["w_in_x"].astype(dt))
+    u = causal_conv1d(p, u, dt)
+    a, gated_in = _gates(p, u, dt)
+
+    h0 = jnp.zeros((B, R), dt) if h0 is None else h0
+
+    def step(h, xs):
+        a_t, in_t = xs
+        h = a_t * h + in_t
+        return h, h
+
+    hT, hs = jax.lax.scan(step, h0, (a.transpose(1, 0, 2),
+                                     gated_in.transpose(1, 0, 2)))
+    hs = hs.transpose(1, 0, 2)  # [B, S, R]
+    y = jnp.einsum("bsr,rd->bsd", hs * gate, p["w_out"].astype(dt))
+    return y, hT
+
+
+def init_recurrent_state(cfg, batch: int, dtype=None):
+    R = cfg.lru_width or cfg.d_model
+    dt = dtype or cfg.dtype
+    return {"h": jnp.zeros((batch, R), dt),
+            "conv": jnp.zeros((batch, cfg.conv1d_width - 1, R), dt)}
+
+
+def recurrent_block_step(cfg, p, x_t, state):
+    """Decode step. x_t: [B, 1, D] -> (y [B, 1, D], new state)."""
+    dt = cfg.dtype
+    B = x_t.shape[0]
+    gate = jax.nn.gelu(jnp.einsum("bsd,dr->bsr", x_t, p["w_in_g"].astype(dt)))
+    u = jnp.einsum("bsd,dr->bsr", x_t, p["w_in_x"].astype(dt))  # [B,1,R]
+    hist = jnp.concatenate([state["conv"], u], axis=1)          # [B,W,R]
+    w = p["conv_w"].astype(dt)
+    u_conv = jnp.einsum("bwr,wr->br", hist, w)[:, None, :] + \
+        p["conv_b"].astype(dt)
+    a, gated_in = _gates(p, u_conv, dt)
+    h = a[:, 0] * state["h"] + gated_in[:, 0]
+    y = jnp.einsum("br,rd->bd", h * gate[:, 0], p["w_out"].astype(dt))
+    new_state = {"h": h, "conv": hist[:, 1:]}
+    return y[:, None, :], new_state

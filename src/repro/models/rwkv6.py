@@ -1,0 +1,148 @@
+"""RWKV-6 "Finch" blocks: time-mix with data-dependent decay + channel-mix.
+
+Structurally faithful to arXiv:2404.05892: token-shift interpolation, LoRA-
+parameterized data-dependent decay w_t, per-head state matrix
+
+    y_t = r_t · (S_t + (u ⊙ k_t) v_tᵀ)
+    S_{t+1} = diag(w_t) S_t + k_t v_tᵀ
+
+Decode keeps O(1) state (no KV cache) — this is why rwkv6 runs the
+``long_500k`` shape natively.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import init_dense
+
+LORA_R = 64
+
+
+def init_time_mix(cfg, key):
+    D = cfg.d_model
+    H = cfg.n_heads
+    pd = cfg.param_dtype
+    ks = jax.random.split(key, 10)
+    mix = lambda i: (0.5 * jnp.ones((D,), pd))
+    return {
+        "mu_r": mix(0), "mu_k": mix(1), "mu_v": mix(2), "mu_w": mix(3),
+        "mu_g": mix(4),
+        "w_r": init_dense(ks[0], D, D, pd)["w"],
+        "w_k": init_dense(ks[1], D, D, pd)["w"],
+        "w_v": init_dense(ks[2], D, D, pd)["w"],
+        "w_g": init_dense(ks[3], D, D, pd)["w"],
+        "w_o": init_dense(ks[4], D, D, pd, scale=D ** -0.5)["w"],
+        # decay: w = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((D,), -6.0, pd),
+        "wA": init_dense(ks[5], D, LORA_R, pd)["w"],
+        "wB": (jax.random.normal(ks[6], (LORA_R, D)) * 0.01).astype(pd),
+        "u": (jax.random.normal(ks[7], (D,)) * 0.1).astype(pd),
+        "ln_scale": jnp.ones((D,), pd),
+    }
+
+
+def _shift(x, prev=None):
+    """x_{t-1} along the sequence axis; ``prev`` seeds position 0 (decode)."""
+    if prev is None:
+        return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    return jnp.concatenate([prev[:, None, :], x[:, :-1]], axis=1)
+
+
+def _project(cfg, p, x, xprev):
+    dt = cfg.dtype
+    def tmix(mu):
+        return x + mu.astype(dt) * (xprev - x)
+    r = jnp.einsum("bsd,de->bse", tmix(p["mu_r"]), p["w_r"].astype(dt))
+    k = jnp.einsum("bsd,de->bse", tmix(p["mu_k"]), p["w_k"].astype(dt))
+    v = jnp.einsum("bsd,de->bse", tmix(p["mu_v"]), p["w_v"].astype(dt))
+    g = jnp.einsum("bsd,de->bse", tmix(p["mu_g"]), p["w_g"].astype(dt))
+    xw = tmix(p["mu_w"])
+    lora = jnp.einsum("bsr,rd->bsd", jnp.tanh(
+        jnp.einsum("bsd,dr->bsr", xw, p["wA"].astype(dt))), p["wB"].astype(dt))
+    logw = -jnp.exp(jnp.clip(p["w0"].astype(jnp.float32) +
+                             lora.astype(jnp.float32), -20.0, 1.0))
+    w = jnp.exp(logw).astype(jnp.float32)  # decay in (0, 1)
+    return r, k, v, g, w
+
+
+def _heads(cfg, t):
+    B, S, D = t.shape
+    H = cfg.n_heads
+    return t.reshape(B, S, H, D // H)
+
+
+def _wkv_scan(cfg, r, k, v, w, u, S0):
+    """Sequential WKV recurrence. r/k/v [B,S,H,Dh]; w [B,S,H,Dh] decay;
+    u [H,Dh] bonus; S0 [B,H,Dh,Dh]. Returns (y [B,S,H,Dh], S_T)."""
+    def step(S, xs):
+        r_t, k_t, v_t, w_t = xs  # [B,H,Dh]
+        kv = k_t[..., :, None] * v_t[..., None, :]          # [B,H,Dh,Dh]
+        y = jnp.einsum("bhk,bhkv->bhv", r_t,
+                       S + u[None, :, :, None] * kv)
+        S = w_t[..., :, None].astype(S.dtype) * S + kv
+        return S, y
+
+    xs = tuple(t.transpose(1, 0, 2, 3) for t in (r, k, v, w))
+    S_T, ys = jax.lax.scan(step, S0, xs)
+    return ys.transpose(1, 0, 2, 3), S_T
+
+
+def time_mix(cfg, p, x, state=None):
+    """x: [B,S,D] -> (y, new_state). state = {'shift':[B,D], 'S':[B,H,Dh,Dh]}"""
+    dt = cfg.dtype
+    B, S, D = x.shape
+    H, Dh = cfg.n_heads, D // cfg.n_heads
+    xprev = _shift(x, None if state is None else state["shift"])
+    r, k, v, g, w = _project(cfg, p, x, xprev)
+    rh, kh, vh = _heads(cfg, r), _heads(cfg, k), _heads(cfg, v)
+    wh = _heads(cfg, w.astype(dt)).astype(jnp.float32)
+    u = p["u"].astype(dt).reshape(H, Dh)
+    S0 = (jnp.zeros((B, H, Dh, Dh), jnp.float32) if state is None
+          else state["S"])
+    y, S_T = _wkv_scan(cfg, rh.astype(jnp.float32), kh.astype(jnp.float32),
+                       vh.astype(jnp.float32), wh, u.astype(jnp.float32), S0)
+    y = y.reshape(B, S, D).astype(dt)
+    # per-head group norm approximated by rms over channels
+    y = y * jax.lax.rsqrt(jnp.mean(
+        y.astype(jnp.float32) ** 2, axis=-1, keepdims=True) + 1e-6).astype(dt)
+    y = y * p["ln_scale"].astype(dt)
+    y = y * jax.nn.silu(g)
+    out = jnp.einsum("bsd,de->bse", y, p["w_o"].astype(dt))
+    new_state = {"shift": x[:, -1, :], "S": S_T}
+    return out, new_state
+
+
+def init_channel_mix(cfg, key):
+    D, F = cfg.d_model, cfg.d_ff
+    pd = cfg.param_dtype
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "mu_k": 0.5 * jnp.ones((D,), pd),
+        "mu_r": 0.5 * jnp.ones((D,), pd),
+        "w_k": init_dense(k1, D, F, pd)["w"],
+        "w_v": init_dense(k2, F, D, pd, scale=F ** -0.5)["w"],
+        "w_r": init_dense(k3, D, D, pd)["w"],
+    }
+
+
+def channel_mix(cfg, p, x, state=None):
+    dt = cfg.dtype
+    xprev = _shift(x, None if state is None else state)
+    xk = x + p["mu_k"].astype(dt) * (xprev - x)
+    xr = x + p["mu_r"].astype(dt) * (xprev - x)
+    k = jnp.einsum("bsd,df->bsf", xk, p["w_k"].astype(dt))
+    k = jnp.square(jax.nn.relu(k))
+    kv = jnp.einsum("bsf,fd->bsd", k, p["w_v"].astype(dt))
+    r = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", xr, p["w_r"].astype(dt)))
+    return r * kv, x[:, -1, :]
+
+
+def init_rwkv_state(cfg, batch: int):
+    D, H = cfg.d_model, cfg.n_heads
+    Dh = D // H
+    return {
+        "tm_shift": jnp.zeros((batch, D), cfg.dtype),
+        "cm_shift": jnp.zeros((batch, D), cfg.dtype),
+        "S": jnp.zeros((batch, H, Dh, Dh), jnp.float32),
+    }

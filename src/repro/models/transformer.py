@@ -1,0 +1,601 @@
+"""Unified model: every assigned architecture family behind one interface.
+
+* ``init_params(cfg, key)``     — pytree with scan-stacked layer weights [L, ...]
+* ``forward(cfg, params, ...)`` — training / scoring path (full sequence)
+* ``init_cache(cfg, batch, capacity)`` / ``decode_step`` — serving path
+* ``loss_fn``                   — next-token cross-entropy (+ MoE aux)
+
+Layers are stacked on a leading L axis and executed with ``jax.lax.scan`` so
+the HLO stays compact for 4-layer and 64-layer models alike (essential for the
+40-pair × 2-mesh dry-run compile budget). ``cfg.remat`` wraps the scanned body
+in ``jax.checkpoint``.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import rglru, rwkv6
+from repro.models.attention import (cross_attention, decode_self_attention,
+                                    init_attn, init_kv_cache, self_attention)
+from repro.models.config import ModelConfig
+from repro.models.layers import (apply_norm, embed, init_embed, init_mlp,
+                                 make_norm_params, mlp, unembed)
+from repro.models.moe import init_moe, moe_mlp
+from repro.sharding.hints import constrain
+
+Params = Any
+
+
+# ---------------------------------------------------------------------------
+# Parameter init
+# ---------------------------------------------------------------------------
+
+def _init_layer(cfg: ModelConfig, key, kind: str) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = {"norm1": make_norm_params(cfg, cfg.d_model),
+         "norm2": make_norm_params(cfg, cfg.d_model)}
+    if kind == "attn":
+        p["attn"] = init_attn(cfg, k1)
+        p["mlp"] = init_mlp(cfg, k2)
+    elif kind == "moe":
+        p["attn"] = init_attn(cfg, k1)
+        p["moe"] = init_moe(cfg, k2)
+    elif kind == "rec":
+        p["rec"] = rglru.init_recurrent_block(cfg, k1)
+        p["mlp"] = init_mlp(cfg, k2)
+    elif kind == "local":
+        p["attn"] = init_attn(cfg, k1)
+        p["mlp"] = init_mlp(cfg, k2)
+    elif kind == "rwkv":
+        p["tm"] = rwkv6.init_time_mix(cfg, k1)
+        p["cm"] = rwkv6.init_channel_mix(cfg, k2)
+    elif kind == "encdec":
+        k3 = jax.random.fold_in(key, 3)
+        p["attn"] = init_attn(cfg, k1)
+        p["cross"] = init_attn(cfg, k2)
+        p["norm3"] = make_norm_params(cfg, cfg.d_model)
+        p["mlp"] = init_mlp(cfg, k3)
+    else:
+        raise ValueError(kind)
+    return p
+
+
+def _stack(cfg, key, n, kind):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _init_layer(cfg, k, kind))(keys)
+
+
+def _layer_kind(cfg: ModelConfig) -> str:
+    return {"dense": "attn", "vlm": "attn", "moe": "moe",
+            "ssm": "rwkv", "audio": "encdec"}[cfg.family]
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    ke, kl, kenc = jax.random.split(key, 3)
+    params = {"embed": init_embed(cfg, ke),
+              "final_norm": make_norm_params(cfg, cfg.d_model)}
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern
+        nb = cfg.n_layers // len(pat)
+        rem = cfg.n_layers - nb * len(pat)
+        kb, kr = jax.random.split(kl)
+        keys = jax.random.split(kb, nb)
+        params["blocks"] = jax.vmap(lambda k: {
+            f"l{i}_{kind}": _init_layer(
+                cfg, jax.random.fold_in(k, i),
+                "rec" if kind == "rec" else "local")
+            for i, kind in enumerate(pat)})(keys)
+        params["rem"] = [
+            _init_layer(cfg, jax.random.fold_in(kr, i),
+                        "rec" if pat[i % len(pat)] == "rec" else "local")
+            for i in range(rem)]
+    elif cfg.family == "audio":
+        params["enc_layers"] = _stack(cfg, kenc, cfg.n_enc_layers, "attn")
+        params["enc_norm"] = make_norm_params(cfg, cfg.d_model)
+        params["layers"] = _stack(cfg, kl, cfg.n_layers, "encdec")
+    else:
+        params["layers"] = _stack(cfg, kl, cfg.n_layers, _layer_kind(cfg))
+    return params
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# Layer bodies (full-sequence path)
+# ---------------------------------------------------------------------------
+
+def _attn_layer(cfg, p, x, positions, *, window, causal=True):
+    h = x + self_attention(cfg, p["attn"], apply_norm(cfg, p["norm1"], x),
+                           positions, causal=causal, window=window)
+    if "moe" in p:
+        out, aux = moe_mlp(cfg, p["moe"], apply_norm(cfg, p["norm2"], h))
+        return h + out, aux
+    return h + mlp(cfg, p["mlp"], apply_norm(cfg, p["norm2"], h)), {}
+
+
+def _rec_layer(cfg, p, x):
+    y, _ = rglru.recurrent_block(cfg, p["rec"], apply_norm(cfg, p["norm1"], x))
+    h = x + y
+    return h + mlp(cfg, p["mlp"], apply_norm(cfg, p["norm2"], h))
+
+
+def _rwkv_layer(cfg, p, x):
+    y, _ = rwkv6.time_mix(cfg, p["tm"], apply_norm(cfg, p["norm1"], x))
+    h = x + y
+    y, _ = rwkv6.channel_mix(cfg, p["cm"], apply_norm(cfg, p["norm2"], h))
+    return h + y
+
+
+def _encdec_layer(cfg, p, x, enc_out, positions):
+    h = x + self_attention(cfg, p["attn"], apply_norm(cfg, p["norm1"], x),
+                           positions, causal=True, window=cfg.window)
+    h = h + cross_attention(cfg, p["cross"], apply_norm(cfg, p["norm2"], h),
+                            kv_x=enc_out)
+    return h + mlp(cfg, p["mlp"], apply_norm(cfg, p["norm3"], h))
+
+
+def _maybe_remat(cfg, fn):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+# ---------------------------------------------------------------------------
+# Full-sequence forward (training / prefill scoring)
+# ---------------------------------------------------------------------------
+
+def _merge_image_embeds(x, image_embeds, image_pos):
+    """Early fusion: overwrite token embeddings at image positions."""
+    def one(e, ie, ip):
+        return e.at[ip].set(ie.astype(e.dtype))
+    return jax.vmap(one)(x, image_embeds, image_pos)
+
+
+def _encode(cfg, params, src_embeds):
+    x = src_embeds.astype(cfg.dtype)
+    positions = jnp.arange(x.shape[1])
+
+    def body(h, lp):
+        h, _ = _attn_layer(cfg, lp, h, positions, window=None, causal=False)
+        return h, None
+
+    x, _ = jax.lax.scan(_maybe_remat(cfg, body), x, params["enc_layers"])
+    return apply_norm(cfg, params["enc_norm"], x)
+
+
+def forward(cfg: ModelConfig, params: Params, tokens, *,
+            image_embeds=None, image_pos=None, src_embeds=None,
+            return_hidden: bool = False):
+    """tokens [B, S] -> (logits [B, S, V], aux dict); with return_hidden=True
+    returns the final-norm'd hidden states instead of logits (used by the
+    chunked-CE loss to avoid materializing the full logits)."""
+    x = embed(cfg, params["embed"], tokens)
+    if cfg.family == "vlm" and image_embeds is not None:
+        x = _merge_image_embeds(x, image_embeds, image_pos)
+    x = constrain(x, "act")
+    S = tokens.shape[1]
+    positions = jnp.arange(S)
+    aux_total = {}
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(h, lp):
+            h, aux = _attn_layer(cfg, lp, h, positions, window=cfg.window)
+            return constrain(h, "act"), aux
+        x, auxs = jax.lax.scan(_maybe_remat(cfg, body), x, params["layers"])
+        aux_total = {k: jnp.sum(v) for k, v in auxs.items()}
+    elif cfg.family == "ssm":
+        def body(h, lp):
+            return constrain(_rwkv_layer(cfg, lp, h), "act"), None
+        x, _ = jax.lax.scan(_maybe_remat(cfg, body), x, params["layers"])
+    elif cfg.family == "hybrid":
+        pat = cfg.block_pattern
+
+        def body(h, bp):
+            for i, kind in enumerate(pat):
+                lp = bp[f"l{i}_{kind}"]
+                if kind == "rec":
+                    h = _rec_layer(cfg, lp, h)
+                else:
+                    h, _ = _attn_layer(cfg, lp, h, positions,
+                                       window=cfg.local_window)
+            return constrain(h, "act"), None
+
+        x, _ = jax.lax.scan(_maybe_remat(cfg, body), x, params["blocks"])
+        for i, lp in enumerate(params["rem"]):
+            kind = pat[i % len(pat)]
+            if kind == "rec":
+                x = _rec_layer(cfg, lp, x)
+            else:
+                x, _ = _attn_layer(cfg, lp, x, positions,
+                                   window=cfg.local_window)
+    elif cfg.family == "audio":
+        assert src_embeds is not None, "audio family needs src_embeds"
+        enc = _encode(cfg, params, src_embeds)
+
+        def body(h, lp):
+            return constrain(_encdec_layer(cfg, lp, h, enc, positions),
+                             "act"), None
+
+        x, _ = jax.lax.scan(_maybe_remat(cfg, body), x, params["layers"])
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    if return_hidden:
+        return x, aux_total
+    return unembed(cfg, params["embed"], x), aux_total
+
+
+def _hidden_states(cfg, params, batch):
+    """Final-norm'd hidden states (forward body without the unembed)."""
+    # forward() computes unembed at the end; reuse everything before it by
+    # calling forward on a copy whose unembed we skip via _NO_UNEMBED.
+    return forward(cfg, params, batch["tokens"],
+                   image_embeds=batch.get("image_embeds"),
+                   image_pos=batch.get("image_pos"),
+                   src_embeds=batch.get("src_embeds"),
+                   return_hidden=True)
+
+
+def chunked_ce(cfg: ModelConfig, params: Params, x, labels,
+               chunk: int = 512) -> jax.Array:
+    """Cross-entropy without materializing [B, S, V] logits: scan over
+    sequence chunks, computing per-chunk logits in f32 and discarding them.
+    Essential at vocab 50k–256k × seq 4k (the logits would dominate memory)."""
+    B, S, D = x.shape
+    table = params["embed"]["table"]
+    chunk = min(chunk, S)
+    if S % chunk:
+        chunk = S  # fall back (small/awkward S)
+    nc = S // chunk
+    xc = x.reshape(B, nc, chunk, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, nc, chunk).transpose(1, 0, 2)
+
+    def body(acc, xs):
+        xb, lb = xs
+        logits = jnp.einsum("bsd,vd->bsv", xb, table,
+                            preferred_element_type=jnp.float32)
+        if cfg.logits_softcap > 0:
+            c = cfg.logits_softcap
+            logits = c * jnp.tanh(logits / c)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(logits, lb[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(lse - tgt), None
+
+    # checkpoint: backward recomputes each chunk's logits instead of storing
+    # them (otherwise autodiff keeps all [B,chunk,V] inputs of logsumexp).
+    total, _ = jax.lax.scan(jax.checkpoint(body),
+                            jnp.zeros((), jnp.float32), (xc, lc))
+    return total / (B * S)
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch) -> jax.Array:
+    """Next-token CE (chunked — no [B,S,V] logits). batch: {'tokens' [B,S],
+    'labels' [B,S], optional modality extras}. MoE aux losses folded in."""
+    x, aux = _hidden_states(cfg, params, batch)
+    loss = chunked_ce(cfg, params, x, batch["labels"])
+    if "moe_lb" in aux:
+        loss = loss + 0.01 * aux["moe_lb"] + 0.001 * aux["moe_z"]
+    return loss
+
+
+# ---------------------------------------------------------------------------
+# Prefill: full-sequence forward that also materializes the decode cache
+# ---------------------------------------------------------------------------
+
+def _attn_layer_kv(cfg, p, x, positions, *, window):
+    """_attn_layer that also returns the (roped) k/v for the cache."""
+    from repro.models.attention import qkv, sdpa
+    from repro.models.layers import dense, rope
+
+    hn = apply_norm(cfg, p["norm1"], x)
+    q, k, v = qkv(cfg, p["attn"], hn)
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    out = sdpa(q, k, v, q_positions=positions, k_positions=positions,
+               causal=True, window=window)
+    B, S = x.shape[:2]
+    h = x + dense(p["attn"]["wo"], out.reshape(B, S, -1), cfg.dtype)
+    if "moe" in p:
+        o, aux = moe_mlp(cfg, p["moe"], apply_norm(cfg, p["norm2"], h))
+        return h + o, (k, v)
+    return h + mlp(cfg, p["mlp"], apply_norm(cfg, p["norm2"], h)), (k, v)
+
+
+def _kv_to_cache(cfg, k, v, capacity, window):
+    """Keep the trailing min(S, capacity) positions; ring-align for windows."""
+    S = k.shape[1]
+    keep = min(S, capacity)
+    k_t, v_t = k[:, S - keep:], v[:, S - keep:]
+    if keep < capacity:
+        pad = [(0, 0), (0, capacity - keep), (0, 0), (0, 0)]
+        k_t, v_t = jnp.pad(k_t, pad), jnp.pad(v_t, pad)
+    elif window is not None and capacity == window:
+        # ring buffer: slot of absolute position p is p mod W
+        shift = S % capacity
+        k_t = jnp.roll(k_t, shift, axis=1)
+        v_t = jnp.roll(v_t, shift, axis=1)
+    return k_t, v_t
+
+
+def prefill(cfg: ModelConfig, params: Params, tokens, capacity: int, *,
+            image_embeds=None, image_pos=None, src_embeds=None):
+    """tokens [B, S] -> (last-token logits [B, 1, V], decode cache).
+
+    The cache is laid out exactly as :func:`init_cache` so ``decode_step`` can
+    continue from position S."""
+    B, S = tokens.shape
+    x = embed(cfg, params["embed"], tokens)
+    if cfg.family == "vlm" and image_embeds is not None:
+        x = _merge_image_embeds(x, image_embeds, image_pos)
+    positions = jnp.arange(S)
+    idx = jnp.asarray(S, jnp.int32)
+    window = cfg.window
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(h, lp):
+            h, kv = _attn_layer_kv(cfg, lp, h, positions, window=window)
+            return h, _kv_to_cache(cfg, kv[0], kv[1], capacity, window)
+
+        x, kvs = jax.lax.scan(_maybe_remat(cfg, body), x, params["layers"])
+        cache = {"kv": {"k": kvs[0], "v": kvs[1]}, "idx": idx}
+    elif cfg.family == "ssm":
+        def body(h, lp):
+            y, tm = rwkv6.time_mix(cfg, lp["tm"], apply_norm(cfg, lp["norm1"], h))
+            h = h + y
+            y, cm_shift = rwkv6.channel_mix(cfg, lp["cm"],
+                                            apply_norm(cfg, lp["norm2"], h))
+            return h + y, {"tm_shift": tm["shift"], "S": tm["S"],
+                           "cm_shift": cm_shift}
+
+        x, st = jax.lax.scan(_maybe_remat(cfg, body), x, params["layers"])
+        cache = {"state": st, "idx": idx}
+    elif cfg.family == "hybrid":
+        pat = cfg.block_pattern
+        win = min(capacity, cfg.local_window)
+
+        def body(h, bp):
+            st = {}
+            for i, kind in enumerate(pat):
+                lp = bp[f"l{i}_{kind}"] if kind == "rec" else bp[f"l{i}_attn"]
+                if kind == "rec":
+                    hn = apply_norm(cfg, lp["norm1"], h)
+                    dt = cfg.dtype
+                    u = jnp.einsum("bsd,dr->bsr", hn,
+                                   lp["rec"]["w_in_x"].astype(dt))
+                    y, hT = rglru.recurrent_block(cfg, lp["rec"], hn)
+                    h = h + y
+                    h = h + mlp(cfg, lp["mlp"], apply_norm(cfg, lp["norm2"], h))
+                    W = cfg.conv1d_width
+                    st[f"l{i}_rec"] = {"h": hT, "conv": u[:, -(W - 1):]}
+                else:
+                    h, kv = _attn_layer_kv(cfg, lp, h, positions, window=win)
+                    kc, vc = _kv_to_cache(cfg, kv[0], kv[1], win, win)
+                    st[f"l{i}_attn"] = {"k": kc, "v": vc}
+            return h, st
+
+        x, blocks = jax.lax.scan(_maybe_remat(cfg, body), x, params["blocks"])
+        rem = []
+        for i, lp in enumerate(params["rem"]):
+            kind = pat[i % len(pat)]
+            win = min(capacity, cfg.local_window)
+            if kind == "rec":
+                hn = apply_norm(cfg, lp["norm1"], x)
+                u = jnp.einsum("bsd,dr->bsr", hn,
+                               lp["rec"]["w_in_x"].astype(cfg.dtype))
+                y, hT = rglru.recurrent_block(cfg, lp["rec"], hn)
+                x = x + y
+                x = x + mlp(cfg, lp["mlp"], apply_norm(cfg, lp["norm2"], x))
+                rem.append({"h": hT, "conv": u[:, -(cfg.conv1d_width - 1):]})
+            else:
+                x, kv = _attn_layer_kv(cfg, lp, x, positions, window=win)
+                kc, vc = _kv_to_cache(cfg, kv[0], kv[1], win, win)
+                rem.append({"k": kc, "v": vc})
+        cache = {"blocks": blocks, "rem": rem, "idx": idx}
+    elif cfg.family == "audio":
+        assert src_embeds is not None
+        enc = _encode(cfg, params, src_embeds)
+
+        def body(h, lp):
+            from repro.models.attention import qkv, sdpa
+            from repro.models.layers import dense, rope
+            hn = apply_norm(cfg, lp["norm1"], h)
+            q, k, v = qkv(cfg, lp["attn"], hn)
+            q = rope(q, positions, cfg.rope_theta)
+            k = rope(k, positions, cfg.rope_theta)
+            a = sdpa(q, k, v, q_positions=positions, k_positions=positions,
+                     causal=True, window=window)
+            h = h + dense(lp["attn"]["wo"], a.reshape(B, S, -1), cfg.dtype)
+            h = h + cross_attention(cfg, lp["cross"],
+                                    apply_norm(cfg, lp["norm2"], h), kv_x=enc)
+            h = h + mlp(cfg, lp["mlp"], apply_norm(cfg, lp["norm3"], h))
+            # cross kv for decode
+            Hkv, Dh = cfg.n_kv_heads, cfg.head_dim
+            Bs, Ssrc = enc.shape[:2]
+            ck = dense(lp["cross"]["wk"], enc, cfg.dtype).reshape(
+                Bs, Ssrc, Hkv, Dh)
+            cv = dense(lp["cross"]["wv"], enc, cfg.dtype).reshape(
+                Bs, Ssrc, Hkv, Dh)
+            return h, (_kv_to_cache(cfg, k, v, capacity, window), (ck, cv))
+
+        x, (kvs, cross) = jax.lax.scan(_maybe_remat(cfg, body), x,
+                                       params["layers"])
+        cache = {"kv": {"k": kvs[0], "v": kvs[1]},
+                 "cross": {"k": cross[0], "v": cross[1]}, "idx": idx}
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(cfg, params["final_norm"], x[:, -1:])
+    return unembed(cfg, params["embed"], x), cache
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init + single-token decode
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int,
+               src_embeds=None, params=None) -> Params:
+    """Build the decode cache/state tree.
+
+    capacity: number of KV slots (== seq_len for full attention,
+    == window for SWA archs on long_500k; ignored by ssm)."""
+    L = cfg.n_layers
+    if cfg.family in ("dense", "vlm", "moe"):
+        kv = jax.vmap(lambda _: init_kv_cache(cfg, batch, capacity))(
+            jnp.arange(L))
+        return {"kv": kv, "idx": jnp.zeros((), jnp.int32)}
+    if cfg.family == "ssm":
+        st = jax.vmap(lambda _: rwkv6.init_rwkv_state(cfg, batch))(
+            jnp.arange(L))
+        return {"state": st, "idx": jnp.zeros((), jnp.int32)}
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern
+        nb = cfg.n_layers // len(pat)
+        rem = cfg.n_layers - nb * len(pat)
+        win = min(capacity, cfg.local_window)
+
+        def block_state(_):
+            st = {}
+            for i, kind in enumerate(pat):
+                if kind == "rec":
+                    st[f"l{i}_rec"] = rglru.init_recurrent_state(cfg, batch)
+                else:
+                    st[f"l{i}_attn"] = init_kv_cache(cfg, batch, win)
+            return st
+
+        blocks = jax.vmap(block_state)(jnp.arange(nb))
+        rem_states = []
+        for i in range(rem):
+            if pat[i % len(pat)] == "rec":
+                rem_states.append(rglru.init_recurrent_state(cfg, batch))
+            else:
+                rem_states.append(init_kv_cache(cfg, batch, win))
+        return {"blocks": blocks, "rem": rem_states,
+                "idx": jnp.zeros((), jnp.int32)}
+    if cfg.family == "audio":
+        assert src_embeds is not None and params is not None
+        enc = _encode(cfg, params, src_embeds)
+
+        def cross_kv(lp):
+            B, Ssrc = enc.shape[:2]
+            Hkv, Dh = cfg.n_kv_heads, cfg.head_dim
+            from repro.models.layers import dense as _dense
+            k = _dense(lp["cross"]["wk"], enc, cfg.dtype).reshape(
+                B, Ssrc, Hkv, Dh)
+            v = _dense(lp["cross"]["wv"], enc, cfg.dtype).reshape(
+                B, Ssrc, Hkv, Dh)
+            return {"k": k, "v": v}
+
+        cross = jax.vmap(cross_kv)(params["layers"])
+        kv = jax.vmap(lambda _: init_kv_cache(cfg, batch, capacity))(
+            jnp.arange(L))
+        return {"kv": kv, "cross": cross, "idx": jnp.zeros((), jnp.int32)}
+    raise ValueError(cfg.family)
+
+
+def decode_step(cfg: ModelConfig, params: Params, tokens, cache):
+    """tokens [B, 1] -> (logits [B, 1, V], new cache). cache['idx'] is the
+    absolute position of this token."""
+    x = embed(cfg, params["embed"], tokens)
+    idx = cache["idx"]
+    window = cfg.window
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        def body(h, xs):
+            lp, kv = xs
+            hn = apply_norm(cfg, lp["norm1"], h)
+            a, kv_new = decode_self_attention(cfg, lp["attn"], hn, kv, idx,
+                                              window=window)
+            h = h + a
+            if "moe" in lp:
+                out, _ = moe_mlp(cfg, lp["moe"], apply_norm(cfg, lp["norm2"], h))
+                h = h + out
+            else:
+                h = h + mlp(cfg, lp["mlp"], apply_norm(cfg, lp["norm2"], h))
+            return h, kv_new
+
+        x, kv_new = jax.lax.scan(body, x, (params["layers"], cache["kv"]))
+        new_cache = {"kv": kv_new, "idx": idx + 1}
+    elif cfg.family == "ssm":
+        def body(h, xs):
+            lp, st = xs
+            y, tm_new = rwkv6.time_mix(
+                cfg, lp["tm"], apply_norm(cfg, lp["norm1"], h),
+                state={"shift": st["tm_shift"], "S": st["S"]})
+            h = h + y
+            y, cm_shift = rwkv6.channel_mix(
+                cfg, lp["cm"], apply_norm(cfg, lp["norm2"], h),
+                state=st["cm_shift"])
+            h = h + y
+            return h, {"tm_shift": tm_new["shift"], "S": tm_new["S"],
+                       "cm_shift": cm_shift}
+
+        x, st_new = jax.lax.scan(body, x, (params["layers"], cache["state"]))
+        new_cache = {"state": st_new, "idx": idx + 1}
+    elif cfg.family == "hybrid":
+        pat = cfg.block_pattern
+
+        def body(h, xs):
+            bp, st = xs
+            st_new = {}
+            for i, kind in enumerate(pat):
+                if kind == "rec":
+                    lp, s = bp[f"l{i}_rec"], st[f"l{i}_rec"]
+                    y, s_new = rglru.recurrent_block_step(
+                        cfg, lp["rec"], apply_norm(cfg, lp["norm1"], h), s)
+                    h = h + y
+                    h = h + mlp(cfg, lp["mlp"], apply_norm(cfg, lp["norm2"], h))
+                    st_new[f"l{i}_rec"] = s_new
+                else:
+                    lp, s = bp[f"l{i}_attn"], st[f"l{i}_attn"]
+                    hn = apply_norm(cfg, lp["norm1"], h)
+                    a, s_new = decode_self_attention(
+                        cfg, lp["attn"], hn, s, idx, window=cfg.local_window)
+                    h = h + a
+                    h = h + mlp(cfg, lp["mlp"], apply_norm(cfg, lp["norm2"], h))
+                    st_new[f"l{i}_attn"] = s_new
+            return h, st_new
+
+        x, blocks_new = jax.lax.scan(body, x, (params["blocks"],
+                                               cache["blocks"]))
+        rem_new = []
+        for i, (lp, s) in enumerate(zip(params["rem"], cache["rem"])):
+            kind = pat[i % len(pat)]
+            if kind == "rec":
+                y, s_new = rglru.recurrent_block_step(
+                    cfg, lp["rec"], apply_norm(cfg, lp["norm1"], x), s)
+                x = x + y
+                x = x + mlp(cfg, lp["mlp"], apply_norm(cfg, lp["norm2"], x))
+            else:
+                hn = apply_norm(cfg, lp["norm1"], x)
+                a, s_new = decode_self_attention(cfg, lp["attn"], hn, s, idx,
+                                                 window=cfg.local_window)
+                x = x + a
+                x = x + mlp(cfg, lp["mlp"], apply_norm(cfg, lp["norm2"], x))
+            rem_new.append(s_new)
+        new_cache = {"blocks": blocks_new, "rem": rem_new, "idx": idx + 1}
+    elif cfg.family == "audio":
+        def body(h, xs):
+            lp, kv, cross = xs
+            hn = apply_norm(cfg, lp["norm1"], h)
+            a, kv_new = decode_self_attention(cfg, lp["attn"], hn, kv, idx,
+                                              window=window)
+            h = h + a
+            h = h + cross_attention(cfg, lp["cross"],
+                                    apply_norm(cfg, lp["norm2"], h),
+                                    kv_cache=cross)
+            h = h + mlp(cfg, lp["mlp"], apply_norm(cfg, lp["norm3"], h))
+            return h, kv_new
+
+        x, kv_new = jax.lax.scan(body, x, (params["layers"], cache["kv"],
+                                           cache["cross"]))
+        new_cache = {"kv": kv_new, "cross": cache["cross"], "idx": idx + 1}
+    else:
+        raise ValueError(cfg.family)
+
+    x = apply_norm(cfg, params["final_norm"], x)
+    return unembed(cfg, params["embed"], x), new_cache

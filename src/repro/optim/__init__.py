@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (OptState, adamw, clip_by_global_norm,
+                                    momentum_sgd, sgd)
+from repro.optim.schedules import constant, cosine, wsd_schedule
+
+__all__ = ["OptState", "adamw", "clip_by_global_norm", "constant", "cosine",
+           "momentum_sgd", "sgd", "wsd_schedule"]

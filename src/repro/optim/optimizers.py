@@ -1,0 +1,80 @@
+"""Minimal optimizer library (pure pytree, optax-style API).
+
+Each optimizer is ``init(params) -> state`` + ``update(grads, state, params,
+lr) -> (updates, state)``; apply with ``jax.tree.map(lambda p, u: p + u, ...)``.
+Used by the single-level baseline trainer; the decentralized bilevel trainer
+uses the paper's own update rules (repro.core).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    mu: Tree | None = None
+    nu: Tree | None = None
+
+
+def clip_by_global_norm(grads: Tree, max_norm: float) -> Tree:
+    norm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(grads)))
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads)
+
+
+def sgd():
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32))
+
+    def update(grads, state, params, lr):
+        ups = jax.tree.map(lambda g: -lr * g, grads)
+        return ups, OptState(step=state.step + 1)
+
+    return init, update
+
+
+def momentum_sgd(beta: float = 0.9):
+    def init(params):
+        return OptState(step=jnp.zeros((), jnp.int32),
+                        mu=jax.tree.map(jnp.zeros_like, params))
+
+    def update(grads, state, params, lr):
+        mu = jax.tree.map(lambda m, g: beta * m + g, state.mu, grads)
+        ups = jax.tree.map(lambda m: -lr * m, mu)
+        return ups, OptState(step=state.step + 1, mu=mu)
+
+    return init, update
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1):
+    def init(params):
+        z = lambda: jax.tree.map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return OptState(step=jnp.zeros((), jnp.int32), mu=z(), nu=z())
+
+    def update(grads, state, params, lr):
+        t = state.step + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(lambda v, g: b2 * v +
+                          (1 - b2) * jnp.square(g.astype(jnp.float32)),
+                          state.nu, grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def leaf(m, v, p):
+            upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            return (-lr * (upd + weight_decay * p.astype(jnp.float32))
+                    ).astype(p.dtype)
+
+        ups = jax.tree.map(leaf, mu, nu, params)
+        return ups, OptState(step=t, mu=mu, nu=nu)
+
+    return init, update

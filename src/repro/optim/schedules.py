@@ -1,0 +1,39 @@
+"""LR schedules, including MiniCPM's WSD (Warmup-Stable-Decay, arXiv:2404.06395)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine(lr: float, total_steps: int, warmup: int = 0, final_frac: float = 0.1):
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total_steps - warmup, 1),
+                        0.0, 1.0)
+        cos = final_frac * lr + (1 - final_frac) * lr * 0.5 * \
+            (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup, warm, cos)
+    return f
+
+
+def wsd_schedule(lr: float, total_steps: int, warmup_frac: float = 0.01,
+                 decay_frac: float = 0.1, final_frac: float = 0.01):
+    """Warmup-Stable-Decay: linear warmup, long flat stage, sharp exponential
+    decay over the final ``decay_frac`` of training (MiniCPM)."""
+    warmup = max(int(total_steps * warmup_frac), 1)
+    decay_start = int(total_steps * (1.0 - decay_frac))
+
+    def f(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = lr * step / warmup
+        decay_t = jnp.clip((step - decay_start) /
+                           jnp.maximum(total_steps - decay_start, 1), 0.0, 1.0)
+        decay = lr * jnp.exp(jnp.log(final_frac) * decay_t)
+        out = jnp.where(step < warmup, warm,
+                        jnp.where(step < decay_start, lr, decay))
+        return out
+    return f

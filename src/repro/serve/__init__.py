@@ -1,0 +1,5 @@
+from repro.serve.engine import ServeEngine
+from repro.serve.steps import cache_specs, make_decode_step, make_prefill_step
+
+__all__ = ["ServeEngine", "cache_specs", "make_decode_step",
+           "make_prefill_step"]

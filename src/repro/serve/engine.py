@@ -1,0 +1,88 @@
+"""Batched serving engine: request queue + prefill/decode scheduling.
+
+A deliberately small continuous-batching loop: requests are prefilled in
+padded batches, then decoded together until EOS/max-tokens. Greedy sampling.
+Single-process (the dry-run proves the sharded lowering; this engine drives
+smoke-scale CPU serving and the serving example).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import init_cache
+from repro.models.config import ModelConfig
+from repro.serve.steps import make_decode_step, make_prefill_step
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                # [S] token ids
+    max_new_tokens: int = 16
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, *, capacity: int = 256,
+                 max_batch: int = 8, eos_id: int | None = None):
+        self.cfg, self.params = cfg, params
+        self.capacity, self.max_batch = capacity, max_batch
+        self.eos_id = eos_id
+        self.queue: list[Request] = []
+        self._prefill = jax.jit(make_prefill_step(cfg, capacity))
+        self._decode = jax.jit(make_decode_step(cfg))
+        self._next_rid = 0
+
+    def submit(self, prompt, max_new_tokens: int = 16) -> int:
+        rid = self._next_rid
+        self._next_rid += 1
+        self.queue.append(Request(rid, np.asarray(prompt, np.int32),
+                                  max_new_tokens))
+        return rid
+
+    def _pad_batch(self, reqs: list[Request]):
+        S = max(len(r.prompt) for r in reqs)
+        toks = np.zeros((len(reqs), S), np.int32)
+        for i, r in enumerate(reqs):
+            toks[i, S - len(r.prompt):] = r.prompt  # left-pad
+        return jnp.asarray(toks)
+
+    def run(self) -> dict[int, list[int]]:
+        """Drain the queue; returns {rid: generated tokens}."""
+        results: dict[int, list[int]] = {}
+        while self.queue:
+            reqs = self.queue[:self.max_batch]
+            self.queue = self.queue[self.max_batch:]
+            batch = {"tokens": self._pad_batch(reqs)}
+            if self.cfg.family == "audio":
+                batch["src_embeds"] = jnp.zeros(
+                    (len(reqs), self.cfg.src_len, self.cfg.d_model),
+                    self.cfg.dtype)
+            if self.cfg.family == "vlm":
+                n = min(self.cfg.n_img_tokens, batch["tokens"].shape[1])
+                batch["image_embeds"] = jnp.zeros(
+                    (len(reqs), n, self.cfg.d_model), self.cfg.dtype)
+                batch["image_pos"] = jnp.tile(
+                    jnp.arange(n, dtype=jnp.int32)[None], (len(reqs), 1))
+            logits, cache = self._prefill(self.params, batch)
+            tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            for r, t in zip(reqs, np.asarray(tok[:, 0])):
+                r.output.append(int(t))
+            steps = max(r.max_new_tokens for r in reqs) - 1
+            for _ in range(max(steps, 0)):
+                tok, _, cache = self._decode(self.params, tok, cache)
+                for i, r in enumerate(reqs):
+                    if not r.done and len(r.output) < r.max_new_tokens:
+                        t = int(np.asarray(tok)[i, 0])
+                        r.output.append(t)
+                        if self.eos_id is not None and t == self.eos_id:
+                            r.done = True
+            for r in reqs:
+                results[r.rid] = r.output
+        return results

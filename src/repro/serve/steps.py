@@ -1,0 +1,49 @@
+"""Serving step functions: batched prefill and single-token decode."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step, init_cache, prefill
+from repro.models.config import ModelConfig
+
+
+def make_prefill_step(cfg: ModelConfig, capacity: int):
+    def step(params, batch):
+        logits, cache = prefill(
+            cfg, params, batch["tokens"], capacity,
+            image_embeds=batch.get("image_embeds"),
+            image_pos=batch.get("image_pos"),
+            src_embeds=batch.get("src_embeds"))
+        return logits, cache
+    return step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def step(params, tokens, cache):
+        logits, cache = decode_step(cfg, params, tokens, cache)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], logits, cache
+    return step
+
+
+def cache_specs(cfg: ModelConfig, batch: int, capacity: int,
+                src_len: int | None = None):
+    """Abstract decode cache for dry-run lowering (no allocation).
+
+    For audio, init_cache needs params/src_embeds to build the cross-attn
+    cache; eval_shape keeps it abstract."""
+    from repro.models import init_params
+
+    def build(key):
+        src = None
+        params = None
+        if cfg.family == "audio":
+            params = init_params(cfg, key)
+            src = jnp.zeros((batch, src_len or cfg.src_len, cfg.d_model),
+                            cfg.dtype)
+        c = init_cache(cfg, batch, capacity, src_embeds=src, params=params)
+        c["idx"] = jnp.asarray(capacity - 1, jnp.int32)
+        return c
+
+    return jax.eval_shape(build, jax.random.PRNGKey(0))

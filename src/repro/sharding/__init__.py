@@ -1,0 +1,4 @@
+from repro.sharding.rules import (batch_pspecs, cache_pspecs, param_pspecs,
+                                  to_shardings)
+
+__all__ = ["batch_pspecs", "cache_pspecs", "param_pspecs", "to_shardings"]

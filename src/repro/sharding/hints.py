@@ -1,0 +1,37 @@
+"""Trace-time activation-sharding hints.
+
+Model code is mesh-agnostic; the launcher activates hints around tracing so
+that ``constrain(x, name)`` becomes ``with_sharding_constraint`` where needed
+(e.g. keeping MoE dispatch buffers expert/token-sharded instead of letting
+SPMD replicate them). With no active hints every call is a no-op, so tests and
+single-device runs are unaffected.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+
+_tls = threading.local()
+
+
+def current() -> dict:
+    return getattr(_tls, "hints", {})
+
+
+@contextlib.contextmanager
+def hints(**kw):
+    old = current()
+    _tls.hints = {**old, **{k: v for k, v in kw.items() if v is not None}}
+    try:
+        yield
+    finally:
+        _tls.hints = old
+
+
+def constrain(x, name: str):
+    spec = current().get(name)
+    if spec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)

@@ -1,0 +1,233 @@
+"""Partitioning rules: param / batch / cache PartitionSpecs per architecture.
+
+Explicit shardings are provided for pjit *inputs* (params, algorithm state,
+batches, caches); intermediate shardings are left to SPMD propagation.
+
+Conventions (production mesh: data=16, model=16, optional pod=2):
+  * Tensor parallelism over ``model``: attention head projections and MLP d_ff
+    are column-sharded on the way in, row-sharded on the way out.
+  * MoE expert parallelism over ``model`` when n_experts divides the axis;
+    otherwise experts stay replicated and d_ff is tensor-parallel per expert
+    (grok-1: E=8 on a 16-wide axis).
+  * Vocab embedding: vocab-sharded when divisible, else d_model-sharded
+    (minicpm 122753, whisper 51865 are not divisible by 16).
+  * ``dp`` train mode: a leading node axis K (the decentralized participants)
+    sharded over ``data``; each node's copy is tensor-sharded over ``model``.
+  * ``fsdp_gt`` mode: node axis = ``pod``; inside a node parameters are
+    additionally sharded over ``data`` (FSDP) on a non-TP dimension.
+
+Every dim is sharded only when divisible by the mesh-axis size (``_ok``).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Tree = Any
+
+
+def _axis_size(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def _ok(dim: int, mesh: Mesh, axis: str | None) -> str | None:
+    if axis is None or axis not in mesh.axis_names:
+        return None
+    return axis if dim % _axis_size(mesh, axis) == 0 else None
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+_EMBED_DATA = [True]  # toggled by the dry-run's --no-embed-fsdp variant
+
+
+def _param_spec(cfg, path: str, shape: tuple[int, ...], mesh: Mesh,
+                fsdp: bool) -> P:
+    """Spec for one parameter leaf WITHOUT the node axis (added by caller).
+
+    ``shape`` excludes the node axis but includes the stacked L/block axis for
+    layer weights (first dim) — rules below index from the trailing dims.
+    """
+    data = "data" if fsdp else None
+    nd = len(shape)
+
+    def tail_spec(*tail):
+        return P(*([None] * (nd - len(tail)) + list(tail)))
+
+    name = path.split("/")[-1]
+    parent = path.split("/")[-2] if "/" in path else ""
+
+    # ---- embedding --------------------------------------------------------
+    if "embed" in path:
+        v, d = shape
+        edata = data if _EMBED_DATA[0] else None
+        if _ok(v, mesh, "model"):
+            return P("model", _ok(d, mesh, edata))
+        return P(_ok(v, mesh, edata), _ok(d, mesh, "model"))
+
+    # ---- norms / biases / small vectors -----------------------------------
+    if "norm" in path or name in ("b", "bias", "conv_b", "lam", "u", "w0",
+                                  "ln_scale") or name.startswith("mu_"):
+        return P(*([None] * nd))
+
+    # ---- MoE ----------------------------------------------------------------
+    if parent == "moe" or (nd >= 3 and name in ("wi", "wg", "wo")
+                           and "moe" in path):
+        if name == "router":
+            return tail_spec(_ok(shape[-2], mesh, data), None)
+        e, d1, d2 = shape[-3], shape[-2], shape[-1]
+        if _ok(e, mesh, "model"):
+            return tail_spec("model", _ok(d1, mesh, data), None)
+        # tensor-parallel experts: shard d_ff
+        if name in ("wi", "wg"):  # [E, D, F]
+            return tail_spec(None, _ok(d1, mesh, data), _ok(d2, mesh, "model"))
+        return tail_spec(None, _ok(d1, mesh, "model"), _ok(d2, mesh, data))
+
+    # ---- attention -----------------------------------------------------------
+    if parent in ("attn", "cross") or "/attn/" in path or "/cross/" in path:
+        if name == "w" or nd >= 2:
+            d_in, d_out = shape[-2], shape[-1]
+            if "wo" in path:
+                return tail_spec(_ok(d_in, mesh, "model"), _ok(d_out, mesh, data))
+            return tail_spec(_ok(d_in, mesh, data), _ok(d_out, mesh, "model"))
+
+    # ---- MLP -------------------------------------------------------------------
+    if name in ("wi", "wg"):
+        return tail_spec(_ok(shape[-2], mesh, data), _ok(shape[-1], mesh, "model"))
+    if name == "wo":
+        return tail_spec(_ok(shape[-2], mesh, "model"), _ok(shape[-1], mesh, data))
+
+    # ---- RG-LRU -------------------------------------------------------------
+    if name in ("w_in_x", "w_in_g"):
+        return tail_spec(_ok(shape[-2], mesh, data), _ok(shape[-1], mesh, "model"))
+    if name == "w_out":
+        return tail_spec(_ok(shape[-2], mesh, "model"), _ok(shape[-1], mesh, data))
+    if name == "conv_w":
+        return tail_spec(None, _ok(shape[-1], mesh, "model"))
+    if parent in ("w_a", "w_i"):
+        if name == "w":
+            return tail_spec(_ok(shape[-2], mesh, data),
+                             _ok(shape[-1], mesh, "model"))
+        return P(*([None] * nd))
+
+    # ---- RWKV ------------------------------------------------------------------
+    if name in ("w_r", "w_k", "w_v", "w_g"):
+        return tail_spec(_ok(shape[-2], mesh, data), _ok(shape[-1], mesh, "model"))
+    if name == "w_o":
+        return tail_spec(_ok(shape[-2], mesh, "model"), _ok(shape[-1], mesh, data))
+    if name in ("wA", "wB"):
+        return P(*([None] * nd))
+
+    # ---- fallback: biggest dim on model if divisible ---------------------------
+    if nd >= 2:
+        return tail_spec(_ok(shape[-2], mesh, data), _ok(shape[-1], mesh, "model"))
+    return P(*([None] * nd))
+
+
+def param_pspecs(cfg, params_shape: Tree, mesh: Mesh, *,
+                 node_axis: str | None = None, fsdp: bool = False) -> Tree:
+    """PartitionSpec tree matching ``params_shape`` (a jax.eval_shape result).
+
+    node_axis: name of the mesh axis carrying the leading decentralized-node
+    dimension on every leaf (None = no node axis, e.g. serving)."""
+
+    ax = _node_ax(node_axis, mesh)
+
+    def leaf(path, s):
+        shape = s.shape
+        if node_axis is not None:
+            spec = _param_spec(cfg, _path_str(path), shape[1:], mesh, fsdp)
+            return P(ax, *spec)
+        return _param_spec(cfg, _path_str(path), shape, mesh, fsdp)
+
+    return jax.tree_util.tree_map_with_path(leaf, params_shape)
+
+
+def _node_ax(node_axis, mesh):
+    """Normalize a node-axis selector (str | tuple | None) against the mesh."""
+    if node_axis is None:
+        return None
+    if isinstance(node_axis, str):
+        node_axis = (node_axis,)
+    present = tuple(a for a in node_axis if a in mesh.axis_names)
+    if not present:
+        return None
+    return present if len(present) > 1 else present[0]
+
+
+def batch_pspecs(batch_shape: Tree, mesh: Mesh, *,
+                 node_axis: str | None, batch_axes: tuple[str, ...]) -> Tree:
+    """Tokens/labels/extras: leading node axis (optional) then batch dim
+    sharded over ``batch_axes`` (when divisible)."""
+
+    ax = _node_ax(node_axis, mesh)
+
+    def leaf(s):
+        shape = s.shape
+        dims: list = []
+        rest = shape
+        if node_axis is not None:
+            dims.append(ax)
+            rest = shape[1:]
+        if rest:
+            size = 1
+            for a in batch_axes:
+                size *= _axis_size(mesh, a)
+            dims.append(tuple(batch_axes) if batch_axes and
+                        rest[0] % size == 0 and size > 1 else None)
+            dims.extend([None] * (len(rest) - 1))
+        return P(*dims)
+
+    return jax.tree.map(leaf, batch_shape)
+
+
+def cache_pspecs(cache_shape: Tree, mesh: Mesh, *, batch: int) -> Tree:
+    """Decode cache: [L, B, S, H, Dh]-style leaves. Shard B over data when
+    divisible; otherwise shard the longest remaining dim over data (sequence-
+    parallel cache for long_500k's batch=1); heads/model-dim over model."""
+    dsz, msz = _axis_size(mesh, "data"), _axis_size(mesh, "model")
+
+    def leaf(s):
+        shape = s.shape
+        if not shape:
+            return P()
+        dims = [None] * len(shape)
+        # find the batch dim: first dim equal to `batch` after the L dim
+        try:
+            bdim = next(i for i, d in enumerate(shape) if d == batch and i >= 1)
+        except StopIteration:
+            bdim = None
+        used_data = False
+        if bdim is not None and batch % dsz == 0 and dsz > 1:
+            dims[bdim] = "data"
+            used_data = True
+        # model axis: largest dim (excluding L and batch) divisible by msz
+        cand = [(d, i) for i, d in enumerate(shape)
+                if i != bdim and i >= 1 and d % msz == 0 and d >= msz]
+        if cand:
+            _, i = max(cand)
+            dims[i] = "model"
+            if not used_data:
+                rest = [(d, j) for d, j in cand if j != i and d % dsz == 0]
+                if rest:
+                    dims[max(rest)[1]] = "data"
+        return P(*dims)
+
+    return jax.tree.map(leaf, cache_shape)
+
+
+def to_shardings(spec_tree: Tree, mesh: Mesh) -> Tree:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,23 @@
+import os
+import sys
+
+# tests see exactly ONE device (the dry-run sets its own 512-device flag in a
+# subprocess); keep XLA quiet and deterministic.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_default_prng_impl", "threefry2x32")
+
+
+import pytest  # noqa: E402
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches():
+    """Free compiled executables between test modules — a single pytest
+    process otherwise accumulates enough XLA CPU JIT state to abort."""
+    yield
+    jax.clear_caches()

@@ -1,0 +1,89 @@
+"""End-to-end convergence of MDBO / VRDBO / DSBO / GDSBO on the quadratic
+bilevel oracle (theory-conformant step sizes)."""
+import jax
+import pytest
+
+from repro.core import (ALGOS, HParams, HypergradConfig, quadratic_problem,
+                        ring, run)
+
+K = 8
+J = 10
+
+
+@pytest.fixture(scope="module")
+def setup():
+    prob, oracle = quadratic_problem(dx=3, dy=5, noise=0.05)
+    topo = ring(K)
+    cfg = HypergradConfig(J=J, lip_gy=prob.lip_gy, randomize=True)
+
+    def sample_batch(k):
+        kf, kg, kh = jax.random.split(k, 3)
+        return {"f": jax.random.split(kf, K),
+                "g": jax.random.split(kg, K),
+                "h": jax.vmap(lambda kk: jax.random.split(kk, J))(
+                    jax.random.split(kh, K))}
+
+    return prob, oracle, topo, cfg, sample_batch
+
+
+HPS = {
+    "dsbo": HParams(eta=0.1, beta1=0.5, beta2=0.5),
+    "gdsbo": HParams(eta=0.1, beta1=0.05, beta2=0.2),
+    "mdbo": HParams(eta=0.1, beta1=0.05, beta2=0.2),
+    "vrdbo": HParams(eta=0.2, alpha1=2.0, alpha2=2.0, beta1=0.2, beta2=0.4),
+}
+
+
+@pytest.mark.parametrize("algo", ALGOS)
+def test_converges_and_reaches_consensus(setup, algo):
+    prob, oracle, topo, cfg, sample_batch = setup
+    r = run(prob, cfg, HPS[algo], topo, algo, sample_batch,
+            jax.random.PRNGKey(9), steps=300, eval_every=300, seed=1)
+    assert r.upper_loss[-1] < r.upper_loss[0], r.upper_loss
+    # near-optimal: F(x*) ≈ 4.15 for this instance
+    assert r.upper_loss[-1] < 5.5
+    assert r.consensus_x[-1] < 1.0
+
+
+def test_mdbo_tracks_mean_estimator(setup):
+    """Gradient-tracking invariant holds along a real MDBO trajectory."""
+    import jax.numpy as jnp
+    from functools import partial
+    from repro.core import mdbo
+    from repro.core.common import replicate
+    from repro.core.tracking import dense_mix
+    prob, oracle, topo, cfg, sample_batch = setup
+    mix = dense_mix(topo.weights)
+    key = jax.random.PRNGKey(0)
+    X0 = replicate(prob.init_x(key), K)
+    Y0 = replicate(prob.init_y(key), K)
+    st = mdbo.init(prob, cfg, HPS["mdbo"], mix, X0, Y0,
+                   sample_batch(key), jax.random.split(key, K))
+    stepf = jax.jit(partial(mdbo.step, prob, cfg, HPS["mdbo"], mix))
+    for t in range(5):
+        key, kb = jax.random.split(key)
+        st = stepf(st, sample_batch(kb), jax.random.split(kb, K))
+        assert jnp.allclose(st.zf.mean(0), st.u.mean(0), atol=1e-4)
+        assert jnp.allclose(st.zg.mean(0), st.v.mean(0), atol=1e-4)
+
+
+def test_vrdbo_converges_faster_than_dsbo_on_low_noise(setup):
+    """The paper's headline: variance reduction beats vanilla SG (loose
+    iteration-budget comparison at matched effective step sizes)."""
+    prob, oracle, topo, cfg, sample_batch = setup
+    r_v = run(prob, cfg, HPS["vrdbo"], topo, "vrdbo", sample_batch,
+              jax.random.PRNGKey(9), steps=150, eval_every=150, seed=2)
+    r_d = run(prob, cfg, HParams(eta=0.2, beta1=0.2, beta2=0.4), topo, "dsbo",
+              sample_batch, jax.random.PRNGKey(9), steps=150, eval_every=150,
+              seed=2)
+    assert r_v.upper_loss[-1] <= r_d.upper_loss[-1] + 0.5
+
+
+def test_complete_topology_consensus_is_exact(setup):
+    prob, oracle, topo, cfg, sample_batch = setup
+    from repro.core import complete
+    r = run(prob, cfg, HPS["mdbo"], complete(K), "mdbo", sample_batch,
+            jax.random.PRNGKey(3), steps=20, eval_every=20)
+    # not exactly 0: the (1−η)X_t term retains a per-node residual that the
+    # per-node stochastic Z re-injects each step — but it stays tiny.
+    assert r.consensus_x[-1] < 1e-4

@@ -1,0 +1,67 @@
+"""Compressed-gossip extension (beyond-paper; see core/compression.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import ring
+from repro.core.compression import (comm_bytes_per_mix, compressed_mix,
+                                    random_sparsify, topk_sparsify)
+from repro.core.tracking import dense_mix
+
+
+def test_topk_keeps_largest():
+    a = {"w": jnp.asarray([[1.0, -5.0, 0.1, 3.0]])}
+    out = topk_sparsify(0.5)(a)["w"]
+    assert jnp.allclose(out, jnp.asarray([[0.0, -5.0, 0.0, 3.0]]))
+
+
+def test_ratio_one_is_identity():
+    rng = np.random.default_rng(0)
+    a = {"w": jnp.asarray(rng.normal(size=(4, 7)))}
+    for comp in (topk_sparsify(1.0), random_sparsify(1.0)):
+        assert jnp.allclose(comp(a)["w"], a["w"])
+
+
+def test_compressed_mix_exact_at_full_ratio():
+    K = 6
+    rng = np.random.default_rng(1)
+    x = {"w": jnp.asarray(rng.normal(size=(K, 5)))}
+    W = ring(K).weights
+    exact = dense_mix(W)(x)["w"]
+    comp = compressed_mix(W, topk_sparsify(1.0))(x)["w"]
+    assert jnp.allclose(exact, comp, atol=1e-6)
+
+
+def test_compressed_mix_preserves_mean():
+    """(W − I)𝟙 = 0 ⇒ the node-mean is exactly preserved regardless of C."""
+    K = 8
+    rng = np.random.default_rng(2)
+    x = {"w": jnp.asarray(rng.normal(size=(K, 10)))}
+    mixed = compressed_mix(ring(K).weights, topk_sparsify(0.3))(x)["w"]
+    assert jnp.allclose(mixed.mean(0), x["w"].mean(0), atol=1e-6)
+
+
+def test_compressed_mix_still_contracts_consensus():
+    K = 8
+    rng = np.random.default_rng(3)
+    x = {"w": jnp.asarray(rng.normal(size=(K, 50)))}
+    mix = compressed_mix(ring(K).weights, topk_sparsify(0.5))
+
+    def cons(t):
+        w = t["w"]
+        return float(jnp.sum((w - w.mean(0)) ** 2))
+
+    c0 = cons(x)
+    for _ in range(10):
+        x = mix(x)
+    assert cons(x) < c0
+
+
+def test_comm_bytes_accounting():
+    tree = {"w": jnp.zeros((4, 100), jnp.float32)}
+    full = comm_bytes_per_mix(tree, 1.0)
+    sparse = comm_bytes_per_mix(tree, 0.1)
+    assert full == 2 * 100 * 4
+    assert sparse == 2 * 10 * (4 + 4)  # values + int32 indices
+    assert sparse < full

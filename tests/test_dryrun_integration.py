@@ -1,0 +1,56 @@
+"""Dry-run integration: sharded lowering on a tiny forced-device mesh.
+
+Runs repro.launch.dryrun in a subprocess (it must own XLA device-count flags)
+for one representative pair per step kind, asserting success + sane roofline
+JSON. Slow-ish (~2 min); marked accordingly.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def _run(args, out_dir):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    # keep the subprocess small: 8 host devices is enough for the debug mesh
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    return subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", *args,
+         "--debug-mesh", "--out-dir", str(out_dir)],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=900)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("arch,shape", [
+    ("smollm-360m", "train_4k"),
+    ("rwkv6-1.6b", "decode_32k"),
+    ("whisper-tiny", "prefill_32k"),
+])
+def test_debug_mesh_dryrun(tmp_path, arch, shape):
+    r = _run(["--arch", arch, "--shape", shape], tmp_path)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    files = [f for f in os.listdir(tmp_path) if f.endswith(".json")]
+    assert len(files) == 1
+    d = json.load(open(tmp_path / files[0]))
+    rl = d["roofline"]
+    assert rl["flops_per_device"] > 0
+    assert rl["hbm_bytes_per_device"] > 0
+    assert rl["dominant"] in ("compute", "memory", "collective")
+    assert d["memory"]["temp_bytes"] > 0
+
+
+@pytest.mark.slow
+def test_debug_mesh_multipod_and_ring_mix(tmp_path):
+    r = _run(["--arch", "smollm-360m", "--shape", "train_4k", "--multi-pod",
+              "--mix", "ring", "--tag", "ring"], tmp_path)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    files = [f for f in os.listdir(tmp_path) if f.endswith(".json")]
+    d = json.load(open(tmp_path / files[0]))
+    assert d["mesh"].count("x") == 2  # pod x data x model
+    # ring mixing must lower to collective-permute, not all-gather-only
+    assert d["collectives"].get("collective-permute_count", 0) > 0

@@ -1,0 +1,105 @@
+"""Estimator algebra + gradient-tracking invariants (property-based)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ring
+from repro.core.estimators import momentum_update, sgd_update, storm_update
+from repro.core.tracking import (dense_mix, gossip_param_update, param_update,
+                                 ring_mix_rolled, track_update)
+
+
+def test_momentum_reduces_to_grad_at_a1():
+    u = {"w": jnp.ones((3,))}
+    d = {"w": jnp.full((3,), 5.0)}
+    out = momentum_update(u, d, 1.0)
+    assert jnp.allclose(out["w"], 5.0)
+
+
+def test_storm_reduces_to_momentum_when_prev_equals_now():
+    u = {"w": jnp.array([1.0, 2.0])}
+    d = {"w": jnp.array([3.0, 4.0])}
+    # Δ_t == Δ_{t-1|t}  ⇒  U_t = (1-a)U_{t-1} + aΔ_t
+    s = storm_update(u, d, d, 0.25)
+    m = momentum_update(u, d, 0.25)
+    assert jnp.allclose(s["w"], m["w"])
+
+
+def test_storm_correction_term():
+    u = {"w": jnp.zeros(2)}
+    now = {"w": jnp.array([1.0, 1.0])}
+    prev = {"w": jnp.array([0.5, 0.5])}
+    out = storm_update(u, now, prev, 0.0)
+    # a=0: U_t = U_{t-1} + Δ_t − Δ_{t-1|t}
+    assert jnp.allclose(out["w"], 0.5)
+
+
+def test_sgd_is_identity_on_grad():
+    assert sgd_update(None, {"w": jnp.ones(2)}, 0.3)["w"].sum() == 2.0
+
+
+@settings(max_examples=20, deadline=None)
+@given(K=st.integers(min_value=2, max_value=12),
+       steps=st.integers(min_value=1, max_value=5))
+def test_tracking_invariant_mean_z_equals_mean_u(K, steps):
+    """The defining property of Eq. (8): mean_k Z_t = mean_k U_t ∀t."""
+    rng = np.random.default_rng(K * 31 + steps)
+    mix = dense_mix(ring(K).weights)
+    u = jnp.asarray(rng.normal(size=(K, 4)))
+    z = u  # init Z_0 = U_0
+    for _ in range(steps):
+        u_new = jnp.asarray(rng.normal(size=(K, 4)))
+        z = track_update(z, u_new, u, mix)
+        u = u_new
+        assert jnp.allclose(z.mean(0), u.mean(0), atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(K=st.integers(min_value=3, max_value=16))
+def test_ring_mix_rolled_equals_dense_ring(K):
+    rng = np.random.default_rng(K)
+    x = {"a": jnp.asarray(rng.normal(size=(K, 5))),
+         "b": jnp.asarray(rng.normal(size=(K, 2, 3)))}
+    dense = dense_mix(ring(K).weights)(x)
+    rolled = ring_mix_rolled()(x)
+    for k in ("a", "b"):
+        assert jnp.allclose(dense[k], rolled[k], atol=1e-6), k
+
+
+def test_param_update_matches_eq9():
+    """X_{t+1} = X_t − η X_t(I−W) − βη Z_t, elementwise vs matrix form."""
+    K, d = 5, 3
+    rng = np.random.default_rng(0)
+    W = ring(K).weights
+    X = rng.normal(size=(K, d))
+    Z = rng.normal(size=(K, d))
+    eta, beta = 0.3, 0.7
+    expected = X - eta * (np.eye(K) - W) @ X - beta * eta * Z
+    got = param_update(jnp.asarray(X), jnp.asarray(Z), eta, beta,
+                       dense_mix(W))
+    assert jnp.allclose(got, expected, atol=1e-6)
+
+
+def test_gossip_update():
+    K = 4
+    W = ring(K).weights
+    X = np.ones((K, 2))
+    D = np.full((K, 2), 2.0)
+    got = gossip_param_update(jnp.asarray(X), jnp.asarray(D), 0.5,
+                              dense_mix(W))
+    assert jnp.allclose(got, 1.0 - 1.0)  # W@1 = 1; 1 - 0.5*2 = 0
+
+
+def test_mix_exact_consensus_contraction():
+    """Consensus error contracts by λ² per dense ring mix."""
+    K = 8
+    topo = ring(K)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.normal(size=(K, 6)))
+    mix = dense_mix(topo.weights)
+    def cons(a):
+        return float(jnp.sum((a - a.mean(0)) ** 2))
+    c0, c1 = cons(x), cons(mix(x))
+    assert c1 <= topo.lam ** 2 * c0 + 1e-9

@@ -1,0 +1,88 @@
+"""Stochastic hypergradient (Eq. 4) against analytic oracles."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import HypergradConfig, expected_hypergrad, quadratic_problem
+from repro.core.hypergrad import (exact_hypergrad_dense, hvp_yy, jvp_xy,
+                                  stochastic_hypergrad, tree_dot)
+
+
+@pytest.fixture(scope="module")
+def quad():
+    return quadratic_problem(dx=3, dy=5, noise=0.0)
+
+
+def test_hvp_matches_dense_hessian(quad):
+    prob, oracle = quad
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (3,))
+    y = jax.random.normal(jax.random.fold_in(key, 1), (5,))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (5,))
+    hv = hvp_yy(prob.lower_loss, x, y, key, v)
+    assert jnp.allclose(hv, oracle["A"] @ v, atol=1e-5)
+
+
+def test_cross_jvp_matches_dense(quad):
+    prob, oracle = quad
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (3,))
+    y = jax.random.normal(jax.random.fold_in(key, 1), (5,))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (5,))
+    cv = jvp_xy(prob.lower_loss, x, y, key, v)
+    # g = 1/2 y^T A y - y^T(Bx+b)  =>  ∇²xy g = -B^T (as map v ↦ -B^T v)
+    assert jnp.allclose(cv, -oracle["B"].T @ v, atol=1e-5)
+
+
+def test_expected_hypergrad_converges_to_exact(quad):
+    """Bias is O((1-μ/L)^J) (Lemma 3): larger J ⇒ closer to exact."""
+    prob, oracle = quad
+    key = jax.random.PRNGKey(2)
+    x = jax.random.normal(key, (3,))
+    y = jax.random.normal(jax.random.fold_in(key, 1), (5,))
+    exact = exact_hypergrad_dense(prob, x, y, key)
+    errs = []
+    for J in (2, 8, 32):
+        cfg = HypergradConfig(J=J, lip_gy=prob.lip_gy, randomize=False)
+        eh = expected_hypergrad(prob, cfg, x, y, key)
+        errs.append(float(jnp.linalg.norm(eh - exact)))
+    assert errs[0] > errs[1] > errs[2]
+    assert errs[2] < 1e-2
+
+
+def test_stochastic_hypergrad_unbiased(quad):
+    """E[∇̃F(x,y;ξ̃)] equals the J-term expected hypergradient (Lemma 2)."""
+    prob, _ = quad
+    key = jax.random.PRNGKey(3)
+    x = jax.random.normal(key, (3,))
+    y = jax.random.normal(jax.random.fold_in(key, 1), (5,))
+    J = 12
+    cfg_r = HypergradConfig(J=J, lip_gy=prob.lip_gy, randomize=True)
+    cfg_d = HypergradConfig(J=J, lip_gy=prob.lip_gy, randomize=False)
+    eh = expected_hypergrad(prob, cfg_d, x, y, key)
+
+    def one(k):
+        kf, kg, kh, kj = jax.random.split(k, 4)
+        return stochastic_hypergrad(prob, cfg_r, x, y, kf, kg,
+                                    jax.random.split(kh, J), kj)
+
+    samples = jax.vmap(one)(jax.random.split(jax.random.PRNGKey(7), 4096))
+    err = jnp.linalg.norm(samples.mean(0) - eh)
+    se = float(samples.std(0).mean()) / (4096 ** 0.5)
+    assert float(err) < 8 * se + 1e-3, (float(err), se)
+
+
+def test_hypergrad_at_ystar_matches_true_gradient(quad):
+    """At y = y*(x) with large J, ∇̃F ≈ ∇F(x) (the true hypergradient)."""
+    prob, oracle = quad
+    x = jnp.array([0.3, -0.7, 1.1])
+    y = oracle["y_star"](x)
+    cfg = HypergradConfig(J=64, lip_gy=prob.lip_gy, randomize=False)
+    eh = expected_hypergrad(prob, cfg, x, y, jax.random.PRNGKey(0))
+    assert jnp.allclose(eh, oracle["hypergrad"](x), atol=1e-3)
+
+
+def test_tree_dot_pytree():
+    a = {"u": jnp.ones((2, 3)), "v": (jnp.full((4,), 2.0),)}
+    b = {"u": jnp.full((2, 3), 3.0), "v": (jnp.ones((4,)),)}
+    assert float(tree_dot(a, b)) == pytest.approx(2 * 3 * 3 + 4 * 2)

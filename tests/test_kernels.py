@@ -1,0 +1,90 @@
+"""Pallas kernel sweeps (interpret=True on CPU) vs pure-jnp oracles."""
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import (attention_ref, flash_attention, rglru_ref,
+                           rglru_scan)
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+def _qkv(key, B, H, Hkv, S, D, dtype):
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, H, S, D)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Hkv, S, D)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Hkv, S, D)).astype(dtype)
+    return q, k, v
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,Hkv,S,D,bq,bk", [
+    (1, 2, 2, 128, 64, 64, 64),      # MHA
+    (2, 4, 2, 256, 64, 128, 128),    # GQA 2:1
+    (1, 8, 1, 128, 128, 128, 64),    # MQA, Dh=128
+])
+def test_flash_causal_sweep(dtype, B, H, Hkv, S, D, bq, bk):
+    q, k, v = _qkv(jax.random.PRNGKey(0), B, H, Hkv, S, D, dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    err = jnp.max(jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32)))
+    assert float(err) < TOL[dtype], float(err)
+
+
+@pytest.mark.parametrize("window", [32, 64, 100])
+def test_flash_sliding_window(window):
+    q, k, v = _qkv(jax.random.PRNGKey(1), 1, 2, 2, 256, 64, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          block_q=64, block_k=64, interpret=True)
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    assert float(jnp.max(jnp.abs(out - ref))) < 2e-5
+
+
+def test_flash_noncausal():
+    q, k, v = _qkv(jax.random.PRNGKey(2), 1, 2, 2, 128, 64, jnp.float32)
+    out = flash_attention(q, k, v, causal=False, block_q=64, block_k=64,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=False)
+    assert float(jnp.max(jnp.abs(out - ref))) < 2e-5
+
+
+def test_flash_block_pruning_equivalence():
+    """Different block shapes give identical results (pruning is mask-safe)."""
+    q, k, v = _qkv(jax.random.PRNGKey(3), 1, 2, 1, 256, 64, jnp.float32)
+    a = flash_attention(q, k, v, causal=True, window=64, block_q=64,
+                        block_k=64, interpret=True)
+    b = flash_attention(q, k, v, causal=True, window=64, block_q=128,
+                        block_k=32, interpret=True)
+    assert float(jnp.max(jnp.abs(a - b))) < 2e-5
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,R,chunk,br", [
+    (1, 128, 128, 64, 128),
+    (2, 256, 256, 128, 128),
+    (1, 512, 384, 256, 128),
+])
+def test_rglru_scan_sweep(dtype, B, S, R, chunk, br):
+    key = jax.random.PRNGKey(4)
+    a = jax.nn.sigmoid(jax.random.normal(key, (B, S, R))).astype(dtype)
+    x = jax.random.normal(jax.random.fold_in(key, 1), (B, S, R)).astype(dtype)
+    out = rglru_scan(a, x, chunk=chunk, block_r=br, interpret=True)
+    ref = rglru_ref(a, x)
+    err = jnp.max(jnp.abs(out.astype(jnp.float32) - ref.astype(jnp.float32)))
+    assert float(err) < (5e-2 if dtype == jnp.bfloat16 else 1e-4), float(err)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_rglru_decay_bounded_state(seed):
+    """Property: with a ∈ (0,1) and bounded inputs, the recurrence state is
+    bounded by |x|_max / (1 - a_max) — no blow-up."""
+    key = jax.random.PRNGKey(seed)
+    a = jax.nn.sigmoid(jax.random.normal(key, (1, 64, 128))) * 0.98
+    x = jnp.clip(jax.random.normal(jax.random.fold_in(key, 1), (1, 64, 128)),
+                 -3, 3)
+    h = rglru_scan(a, x, chunk=32, block_r=128, interpret=True)
+    bound = 3.0 / (1.0 - float(a.max())) + 1e-3
+    assert float(jnp.abs(h).max()) <= bound

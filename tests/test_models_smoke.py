@@ -1,0 +1,96 @@
+"""Per-architecture smoke tests (deliverable f): reduced variant of each
+assigned arch — one forward/train step on CPU, asserting shapes + no NaNs."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get
+from repro.core.common import replicate
+from repro.models import (decode_step, forward, init_cache, init_params,
+                          loss_fn)
+from repro.train import TrainerConfig, make_mix, make_step_batch, make_step_fns
+
+B, S = 2, 16
+
+
+def _batch(cfg, key):
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    if cfg.family == "vlm":
+        n = min(cfg.n_img_tokens, S)
+        batch["image_embeds"] = 0.02 * jax.random.normal(
+            key, (B, n, cfg.d_model))
+        batch["image_pos"] = jnp.tile(jnp.arange(n)[None], (B, 1))
+    if cfg.family == "audio":
+        batch["src_embeds"] = 0.02 * jax.random.normal(
+            key, (B, cfg.src_len, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_reduced_forward_shapes_and_finite(arch):
+    spec = get(arch)
+    cfg = spec.reduced()
+    assert cfg.d_model <= 512 and cfg.n_layers <= max(
+        2, len(cfg.block_pattern)) and (cfg.n_experts or 0) <= 4
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    batch = _batch(cfg, key)
+    logits, _ = forward(cfg, params, batch["tokens"],
+                        image_embeds=batch.get("image_embeds"),
+                        image_pos=batch.get("image_pos"),
+                        src_embeds=batch.get("src_embeds"))
+    assert logits.shape == (B, S, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_reduced_bilevel_train_step(arch):
+    """One decentralized MDBO train step (the paper's technique) per arch."""
+    spec = get(arch)
+    cfg = spec.reduced()
+    tc = TrainerConfig(J=1, mix="ring")
+    problem, init_fn, step_fn = make_step_fns(cfg, tc)
+    K = 2
+    mix = make_mix(tc, K)
+    key = jax.random.PRNGKey(1)
+    X0 = replicate(problem.init_x(key), K)
+    Y0 = replicate(problem.init_y(key), K)
+    batch = make_step_batch(cfg, tc, key, K, per_node=1, seq=S)
+    keys = jax.random.split(key, K)
+    st = init_fn(mix, X0, Y0, batch, keys)
+    st = step_fn(mix, st, batch, keys)
+    for leaf in jax.tree.leaves(st.y):
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
+    loss = loss_fn(cfg, jax.tree.map(lambda a: a[0], st.y),
+                   jax.tree.map(lambda a: a[0], batch["g"]))
+    assert bool(jnp.isfinite(loss))
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_reduced_decode_step(arch):
+    spec = get(arch)
+    cfg = spec.reduced()
+    key = jax.random.PRNGKey(2)
+    params = init_params(cfg, key)
+    src = (0.02 * jax.random.normal(key, (B, cfg.src_len, cfg.d_model))
+           if cfg.family == "audio" else None)
+    cache = init_cache(cfg, B, 32, src_embeds=src, params=params)
+    cache["idx"] = jnp.asarray(7, jnp.int32)
+    tok = jax.random.randint(key, (B, 1), 0, cfg.vocab)
+    logits, cache2 = decode_step(cfg, params, tok, cache)
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+    assert int(cache2["idx"]) == 8
+
+
+def test_long_ctx_policy_recorded():
+    """Every arch has an explicit long_500k policy; whisper is the only skip."""
+    skips = [a for a in ARCHS if get(a).long_ctx == "skip"]
+    assert skips == ["whisper-tiny"]
+    for a in ARCHS:
+        spec = get(a)
+        if spec.long_ctx == "swa":
+            assert spec.model_for_shape("long_500k").window == spec.swa_window
+        if spec.long_ctx == "native":
+            assert spec.config.family in ("ssm", "hybrid")

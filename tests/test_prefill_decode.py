@@ -1,0 +1,81 @@
+"""Prefill/decode consistency vs the full forward pass, per family."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get
+from repro.models import decode_step, forward, init_params, prefill
+
+CASES = ["qwen2.5-3b", "rwkv6-1.6b", "recurrentgemma-2b", "phi3.5-moe-42b-a6.6b",
+         "whisper-tiny", "chameleon-34b"]
+
+
+def _extras(cfg, key, B, S):
+    ex = {}
+    if cfg.family == "vlm":
+        n = min(cfg.n_img_tokens, S)
+        ex["image_embeds"] = 0.02 * jax.random.normal(key, (B, n, cfg.d_model))
+        ex["image_pos"] = jnp.tile(jnp.arange(n)[None], (B, 1))
+    if cfg.family == "audio":
+        ex["src_embeds"] = 0.02 * jax.random.normal(
+            key, (B, cfg.src_len, cfg.d_model))
+    return ex
+
+
+@pytest.mark.parametrize("arch", CASES)
+def test_prefill_then_decode_matches_forward(arch):
+    cfg = get(arch).reduced()
+    if cfg.family == "moe":
+        # exactness requires no capacity drops (C depends on total N, so a
+        # shorter prefill can drop tokens the full pass keeps — by design)
+        cfg = cfg.with_overrides(capacity_factor=8.0)
+    key = jax.random.PRNGKey(0)
+    B, S = 2, 12
+    params = init_params(cfg, key)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    ex = _extras(cfg, key, B, S - 1)
+    full, _ = forward(cfg, params, toks, **_extras(cfg, key, B, S))
+    lg, cache = prefill(cfg, params, toks[:, :S - 1], capacity=16, **ex)
+    assert jnp.max(jnp.abs(lg[:, 0] - full[:, S - 2])) < 2e-4
+    lg2, cache = decode_step(cfg, params, toks[:, S - 1:], cache)
+    assert jnp.max(jnp.abs(lg2[:, 0] - full[:, S - 1])) < 2e-4
+
+
+def test_sliding_window_ring_cache():
+    """Windowed decode matches a windowed forward (SWA long_500k variant)."""
+    spec = get("qwen2.5-3b")
+    cfg = spec.reduced().with_overrides(window=8)
+    key = jax.random.PRNGKey(1)
+    B, S = 1, 20
+    params = init_params(cfg, key)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    full, _ = forward(cfg, params, toks)
+    # prefill 12 tokens into a ring cache of capacity == window, decode rest
+    lg, cache = prefill(cfg, params, toks[:, :12], capacity=8)
+    assert jnp.max(jnp.abs(lg[:, 0] - full[:, 11])) < 2e-4
+    for t in range(12, S):
+        lg, cache = decode_step(cfg, params, toks[:, t:t + 1], cache)
+        err = float(jnp.max(jnp.abs(lg[:, 0] - full[:, t])))
+        assert err < 2e-4, (t, err)
+
+
+def test_decode_long_sequence_matches_forward_rollout():
+    """Greedy rollout via decode == argmax over forward logits (teacher)."""
+    cfg = get("rwkv6-1.6b").reduced()
+    key = jax.random.PRNGKey(2)
+    params = init_params(cfg, key)
+    B, S = 1, 10
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab)
+    lg, cache = prefill(cfg, params, toks, capacity=32)
+    cur = jnp.argmax(lg[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    seq = [toks]
+    for _ in range(4):
+        seq.append(cur)
+        lg, cache = decode_step(cfg, params, cur, cache)
+        cur = jnp.argmax(lg[:, -1], axis=-1)[:, None].astype(jnp.int32)
+    rolled = jnp.concatenate(seq, axis=1)
+    full, _ = forward(cfg, params, rolled)
+    # forward argmax at each generated position reproduces the next token
+    for i in range(4):
+        pos = S - 1 + i
+        assert int(jnp.argmax(full[0, pos])) == int(rolled[0, pos + 1])

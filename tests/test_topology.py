@@ -1,0 +1,55 @@
+"""Assumption 1 (mixing matrix) properties, incl. hypothesis sweeps."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import topology
+
+
+@pytest.mark.parametrize("name,K", [("ring", 8), ("ring", 2), ("ring", 1),
+                                    ("complete", 5), ("star", 6),
+                                    ("erdos", 7)])
+def test_assumption1(name, K):
+    topo = topology.get(name, K)
+    topo.check_assumption1()
+    assert topo.size == K
+
+
+def test_torus_matches_mesh():
+    topo = topology.torus2d(4, 4)
+    topo.check_assumption1()
+    assert topo.size == 16
+    # every node has 4 neighbours on a 2-D torus
+    assert all(len(topo.neighbors(k)) == 4 for k in range(16))
+
+
+@settings(max_examples=25, deadline=None)
+@given(K=st.integers(min_value=1, max_value=24))
+def test_ring_doubly_stochastic(K):
+    topo = topology.ring(K)
+    W = topo.weights
+    assert np.allclose(W.sum(axis=0), 1.0)
+    assert np.allclose(W.sum(axis=1), 1.0)
+    assert np.allclose(W, W.T)
+    assert (W >= 0).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(K=st.integers(min_value=2, max_value=16))
+def test_spectral_gap_positive(K):
+    assert 0.0 < topology.ring(K).spectral_gap <= 1.0
+    assert topology.complete(K).spectral_gap == pytest.approx(1.0)
+
+
+def test_gap_shrinks_with_ring_size():
+    gaps = [topology.ring(K).spectral_gap for K in (4, 8, 16, 32)]
+    assert all(a > b for a, b in zip(gaps, gaps[1:]))
+
+
+def test_mixing_preserves_mean():
+    rng = np.random.default_rng(0)
+    for name in ("ring", "star", "complete"):
+        topo = topology.get(name, 6)
+        x = rng.normal(size=(6, 3))
+        mixed = topo.weights @ x
+        assert np.allclose(mixed.mean(axis=0), x.mean(axis=0))

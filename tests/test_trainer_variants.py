@@ -1,0 +1,52 @@
+"""LM-trainer variants: VRDBO and single-level gt_sgd on a reduced arch."""
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get
+from repro.core.common import replicate
+from repro.models import loss_fn
+from repro.train import TrainerConfig, make_mix, make_step_batch, make_step_fns
+
+K, SEQ = 2, 16
+
+
+@pytest.mark.parametrize("algo", ["vrdbo", "gt_sgd"])
+def test_lm_trainer_variant_steps(algo):
+    cfg = get("smollm-360m").reduced()
+    tc = TrainerConfig(algo=algo, J=1, mix="ring")
+    problem, init_fn, step_fn = make_step_fns(cfg, tc)
+    mix = make_mix(tc, K)
+    key = jax.random.PRNGKey(0)
+    X0 = replicate(problem.init_x(key), K)
+    Y0 = replicate(problem.init_y(key), K)
+    batch = make_step_batch(cfg, tc, key, K, per_node=1, seq=SEQ)
+    keys = jax.random.split(key, K)
+    st = init_fn(mix, X0, Y0, batch, keys)
+    st = jax.jit(partial(step_fn, mix))(st, batch, keys)
+    for leaf in jax.tree.leaves(st.y):
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32))))
+    loss = loss_fn(cfg, jax.tree.map(lambda a: a[0], st.y),
+                   jax.tree.map(lambda a: a[0], batch["g"]))
+    assert bool(jnp.isfinite(loss))
+
+
+def test_vrdbo_state_carries_previous_iterate():
+    cfg = get("smollm-360m").reduced()
+    tc = TrainerConfig(algo="vrdbo", J=1)
+    problem, init_fn, step_fn = make_step_fns(cfg, tc)
+    mix = make_mix(tc, K)
+    key = jax.random.PRNGKey(1)
+    X0 = replicate(problem.init_x(key), K)
+    Y0 = replicate(problem.init_y(key), K)
+    batch = make_step_batch(cfg, tc, key, K, per_node=1, seq=SEQ)
+    keys = jax.random.split(key, K)
+    st = init_fn(mix, X0, Y0, batch, keys)
+    st2 = step_fn(mix, st, batch, keys)
+    # STORM correction anchors: (x_prev, y_prev) must equal the pre-step state
+    assert jnp.allclose(st2.x_prev, st.x)
+    l1 = jax.tree.leaves(st.y)[0]
+    l2 = jax.tree.leaves(st2.y_prev)[0]
+    assert jnp.allclose(l1, l2)
