@@ -1,0 +1,58 @@
+"""Fused-scan vs per-step dispatch on the §6 logreg workload.
+
+Measures steps/sec of ``engine.run`` with ``dispatch='fused'`` (one scan-fused
+device program per eval interval, batches sampled *inside* the scan) against
+``dispatch='per_step'`` (the legacy one-jit-call-per-iteration loop). The
+ratio is the host-dispatch overhead the scan fusion removes — the per-step
+pattern pays a Python round-trip per iteration, which dominates at paper
+scale. Compile time is excluded (a warm-up run with identical shapes first).
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+
+from benchmarks.common import PAPER_HP, J
+from repro.core import HypergradConfig, logreg_hyperopt, ring
+from repro.core.engine import Engine
+from repro.data import (make_classification, make_device_sampler,
+                        shard_to_nodes, train_val_split)
+
+
+def main(steps: int = 240, K: int = 8, d: int = 123, eval_every: int = 30):
+    ds = make_classification(n=8_000, d=d, c=2, seed=0)
+    tr, va = train_val_split(ds, 0.3, seed=0)
+    sample = make_device_sampler(shard_to_nodes(tr, K), shard_to_nodes(va, K),
+                                 batch=max(400 // K, 1), J=J)
+    prob = logreg_hyperopt(d=d, c=2, lip_gy=5.0)
+    cfg = HypergradConfig(J=J, lip_gy=5.0, randomize=True)
+    eval_batch = {"a": jnp.asarray(va.a[:2048]), "b": jnp.asarray(va.b[:2048])}
+
+    rates = {}
+    for dispatch in ("per_step", "fused"):
+        eng = Engine(prob, cfg, PAPER_HP["mdbo"], ring(K), algo="mdbo",
+                     dispatch=dispatch)
+        # warm-up with identical shapes: fills the engine's jit cache
+        eng.run(sample, eval_batch, steps=steps, eval_every=eval_every)
+        t0 = time.perf_counter()
+        eng.run(sample, eval_batch, steps=steps, eval_every=eval_every)
+        rates[dispatch] = steps / (time.perf_counter() - t0)
+
+    speedup = rates["fused"] / rates["per_step"]
+    rows = []
+    for dispatch in ("per_step", "fused"):
+        rows.append({
+            "name": f"engine/logreg-mdbo/{dispatch}",
+            "us_per_call": round(1e6 / rates[dispatch], 1),
+            "steps_per_sec": round(rates[dispatch], 1),
+            "derived": (f"fused_vs_per_step={speedup:.1f}x"
+                        if dispatch == "fused" else
+                        f"eval_every={eval_every}"),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

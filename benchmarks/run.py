@@ -1,5 +1,8 @@
 """Benchmark orchestrator — one entry per paper table/figure + framework
-microbenches. Prints ``name,us_per_call,derived`` CSV.
+microbenches. Prints ``name,us_per_call,steps_per_sec,derived`` CSV.
+
+All figure reproductions run through the scan-fused engine (core.engine);
+``engine_bench`` additionally reports the fused vs per-step dispatch ratio.
 
   PYTHONPATH=src python -m benchmarks.run [--quick]
 """
@@ -16,9 +19,10 @@ def main() -> None:
     args = ap.parse_args()
     steps = 30 if args.quick else 60
 
-    from benchmarks import (fig1_loss_curves, fig2_accuracy, fig3_speedup,
-                            fig_compression, fig_noniid, fig_topology,
-                            hypergrad_bench, mixing_bench, roofline_table)
+    from benchmarks import (engine_bench, fig1_loss_curves, fig2_accuracy,
+                            fig3_speedup, fig_compression, fig_noniid,
+                            fig_topology, hypergrad_bench, mixing_bench,
+                            roofline_table)
 
     rows = []
     rows += fig1_loss_curves.main(steps=steps)
@@ -27,13 +31,16 @@ def main() -> None:
     rows += fig_topology.main(steps=max(steps // 2, 10))
     rows += fig_compression.main(steps=max(steps // 2, 10))
     rows += fig_noniid.main(steps=max(steps // 2, 10))
+    rows += engine_bench.main(steps=80 if args.quick else 240,
+                              eval_every=20 if args.quick else 30)
     rows += mixing_bench.main()
     rows += hypergrad_bench.main()
     rows += roofline_table.main()
 
-    print("name,us_per_call,derived")
+    print("name,us_per_call,steps_per_sec,derived")
     for r in rows:
-        print(f"{r['name']},{r['us_per_call']},\"{r['derived']}\"")
+        sps = r.get("steps_per_sec", "")
+        print(f"{r['name']},{r['us_per_call']},{sps},\"{r['derived']}\"")
 
 
 if __name__ == '__main__':

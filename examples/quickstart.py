@@ -1,15 +1,17 @@
 """Quickstart: decentralized bilevel optimization in ~40 lines.
 
 Solves a quadratic bilevel problem over an 8-node ring with MDBO and checks
-the result against the analytic optimum.
+the result against the analytic optimum. Runs on the scan-fused engine:
+every eval interval (here 100 steps) is ONE device program — the sampler
+below is pure JAX, so batch drawing happens inside the scan too.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import jax
 import jax.numpy as jnp
 
-from repro.core import (HParams, HypergradConfig, quadratic_problem, ring,
-                        run)
+from repro.core import (Engine, HParams, HypergradConfig, quadratic_problem,
+                        ring)
 
 K, J = 8, 10
 
@@ -30,11 +32,19 @@ def sample_batch(key):
                 jax.random.split(kh, K))}
 
 
-result = run(problem, cfg, hp, topology, "mdbo", sample_batch,
-             jax.random.PRNGKey(0), steps=400, eval_every=100)
+# mix="ring_rolled" picks the W-free ring backend from the engine registry;
+# "dense" (einsum with topology.weights) is numerically identical here.
+engine = Engine(problem, cfg, hp, topology, algo="mdbo", mix="ring_rolled",
+                dispatch="fused")
+engine.run(sample_batch, jax.random.PRNGKey(0), steps=400, eval_every=100)
+# second run reuses the compiled scan program → the steps/s below is the
+# warm steady-state, not XLA compile time
+result = engine.run(sample_batch, jax.random.PRNGKey(0),
+                    steps=400, eval_every=100)
 
 x_star = oracle["x_star"]()
 for t, loss, cx in zip(result.steps, result.upper_loss, result.consensus_x):
     print(f"step {t:4d}  upper-loss {loss:8.4f}  consensus {cx:.2e}")
 print(f"analytic optimum F(x*) region reached "
       f"(|∇F| small, consensus ~{result.consensus_x[-1]:.1e})")
+print(f"{400 / result.wall_time_s:,.0f} steps/s (scan-fused dispatch)")

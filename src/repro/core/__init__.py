@@ -5,13 +5,17 @@ Public surface:
   problems.{BilevelProblem,quadratic_problem,logreg_hyperopt}
   hypergrad.{HypergradConfig,stochastic_hypergrad,expected_hypergrad}
   common.HParams, driver.run
+  engine.{Engine,ALGORITHMS,MIX_BACKENDS,make_mix,key_schedule} — the
+    scan-fused run substrate behind driver.run
   mdbo / vrdbo / baselines step functions
   tracking.{dense_mix,ring_mix_rolled,ring_mix_local}
 """
-from repro.core import (baselines, compression, distributed, mdbo, topology,
-                        tracking, vrdbo)
+from repro.core import (baselines, compression, distributed, engine, mdbo,
+                        topology, tracking, vrdbo)
 from repro.core.common import HParams, consensus_error, node_mean, replicate
 from repro.core.driver import ALGOS, RunResult, run
+from repro.core.engine import (ALGORITHMS, MIX_BACKENDS, Engine, key_schedule,
+                               make_mix)
 from repro.core.hypergrad import (HypergradConfig, expected_hypergrad,
                                   stochastic_hypergrad)
 from repro.core.problems import (BilevelProblem, accuracy, logreg_hyperopt,
@@ -20,10 +24,12 @@ from repro.core.topology import Topology, complete, get, ring, star, torus2d
 from repro.core.tracking import dense_mix, ring_mix_local, ring_mix_rolled
 
 __all__ = [
-    "ALGOS", "BilevelProblem", "HParams", "HypergradConfig", "RunResult",
-    "Topology", "accuracy", "baselines", "complete", "consensus_error",
-    "dense_mix", "expected_hypergrad", "get", "logreg_hyperopt", "mdbo",
-    "node_mean", "quadratic_problem", "replicate", "ring", "ring_mix_local",
-    "ring_mix_rolled", "run", "star", "stochastic_hypergrad", "topology",
-    "torus2d", "tracking", "vrdbo", "compression", "distributed",
+    "ALGORITHMS", "ALGOS", "BilevelProblem", "Engine", "HParams",
+    "HypergradConfig", "MIX_BACKENDS", "RunResult", "Topology", "accuracy",
+    "baselines", "complete", "consensus_error", "dense_mix", "engine",
+    "expected_hypergrad", "get", "key_schedule", "logreg_hyperopt",
+    "make_mix", "mdbo", "node_mean", "quadratic_problem", "replicate",
+    "ring", "ring_mix_local", "ring_mix_rolled", "run", "star",
+    "stochastic_hypergrad", "topology", "torus2d", "tracking", "vrdbo",
+    "compression", "distributed",
 ]

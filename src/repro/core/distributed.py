@@ -2,9 +2,13 @@
 
 The simulator (core.driver) stacks nodes on a leading axis of one array; here
 each mesh shard *owns* its node and the ring gossip is two physical
-``collective_permute``s (tracking.ring_mix_local) — the communication pattern
-a real deployment runs, byte-for-byte. The algorithm bodies are reused
-unchanged (mdbo.step / vrdbo.step are pure in the mix operator).
+``collective_permute``s (the engine's ``ring_local`` mix backend). The
+algorithm bodies are reused unchanged through the engine's algorithm registry
+(mdbo.step / vrdbo.step are pure in the mix operator).
+
+For scan-fused multi-step execution over a mesh, build an
+:class:`repro.core.engine.Engine` with ``mix="ring_local"`` directly — these
+helpers remain the minimal per-call entry points.
 
 Numerical note: dense_mix(ring(K).weights) and the ppermute ring mix are the
 same matrix product evaluated in different orders; equivalence is tested to
@@ -19,18 +23,12 @@ from typing import Any
 import jax
 from jax.sharding import PartitionSpec as P
 
-from repro.core import mdbo, vrdbo
 from repro.core.common import HParams
+from repro.core.engine import ALGORITHMS, make_mix, shard_map_compat
 from repro.core.hypergrad import HypergradConfig
 from repro.core.problems import BilevelProblem
-from repro.core.tracking import ring_mix_local
 
 Tree = Any
-
-
-def _node_specs(tree: Tree, axis_name: str) -> Tree:
-    """P(axis_name) on every leaf's leading (node) dim."""
-    return jax.tree.map(lambda _: P(axis_name), tree)
 
 
 def make_distributed_step(problem: BilevelProblem, hcfg: HypergradConfig,
@@ -40,15 +38,14 @@ def make_distributed_step(problem: BilevelProblem, hcfg: HypergradConfig,
     """jit-able step over ``mesh``: node k lives on shard k of ``axis_name``;
     gossip = 2 collective_permutes. State/batch/keys keep the leading node
     axis (length K = mesh.shape[axis_name]), sharded 1-per-device."""
-    mix = ring_mix_local(axis_name, self_weight)
-    body = {"mdbo": mdbo.step, "vrdbo": vrdbo.step}[algo]
-    inner = partial(body, problem, hcfg, hp, mix)
+    mix = make_mix("ring_local", K=mesh.shape[axis_name], axis_name=axis_name,
+                   self_weight=self_weight)
+    inner = partial(ALGORITHMS[algo].step, problem, hcfg, hp, mix)
 
     spec = P(axis_name)  # prefix pytree: every leaf node-sharded on dim 0
 
     def step(state, batch, keys):
-        return jax.shard_map(inner, mesh=mesh, in_specs=(spec, spec, spec),
-                             out_specs=spec, check_vma=False)(
+        return shard_map_compat(inner, mesh, (spec, spec, spec), spec)(
             state, batch, keys)
 
     return jax.jit(step)
@@ -58,16 +55,14 @@ def make_distributed_init(problem: BilevelProblem, hcfg: HypergradConfig,
                           hp: HParams, mesh, *, algo: str = "mdbo",
                           axis_name: str = "data",
                           self_weight: float = 1.0 / 3.0):
-    mix = ring_mix_local(axis_name, self_weight)
-    body = {"mdbo": mdbo.init, "vrdbo": vrdbo.init}[algo]
-    inner = partial(body, problem, hcfg, hp, mix)
+    mix = make_mix("ring_local", K=mesh.shape[axis_name], axis_name=axis_name,
+                   self_weight=self_weight)
+    inner = partial(ALGORITHMS[algo].init, problem, hcfg, hp, mix)
 
     spec = P(axis_name)
 
     def init(X0, Y0, batch, keys):
-        return jax.shard_map(inner, mesh=mesh,
-                             in_specs=(spec, spec, spec, spec),
-                             out_specs=spec, check_vma=False)(
+        return shard_map_compat(inner, mesh, (spec, spec, spec, spec), spec)(
             X0, Y0, batch, keys)
 
     return jax.jit(init)

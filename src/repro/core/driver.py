@@ -1,48 +1,28 @@
 """Algorithm driver: uniform run-loop over MDBO / VRDBO / DSBO / GDSBO.
 
 Used by the paper-reproduction benchmarks, the examples and the test-suite.
+Since the engine refactor this module is a thin façade over
+:class:`repro.core.engine.Engine` — by default every eval interval executes
+as one scan-fused device program (``dispatch="fused"``); pass
+``dispatch="per_step"`` for the legacy one-jit-call-per-step loop and
+``mix_backend`` to pick a communication backend from the engine registry.
+
 The distributed LM trainer (repro.train) builds its own step on the same
 primitives instead of using this simulator.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from functools import partial
 from typing import Any, Callable
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import baselines, mdbo, vrdbo
-from repro.core.common import HParams, consensus_error, node_mean, replicate
+from repro.core.common import HParams
+from repro.core.engine import ALGORITHMS, Engine, RunResult
 from repro.core.hypergrad import HypergradConfig
 from repro.core.problems import BilevelProblem
 from repro.core.topology import Topology
-from repro.core.tracking import dense_mix
 
-ALGOS = ("mdbo", "vrdbo", "dsbo", "gdsbo")
-
-
-@dataclasses.dataclass
-class RunResult:
-    algo: str
-    steps: list[int]
-    upper_loss: list[float]
-    lower_loss: list[float]
-    consensus_x: list[float]
-    consensus_y: list[float]
-    extra: dict[str, list[float]]
-    wall_time_s: float = 0.0
-
-    def as_rows(self):
-        for i, t in enumerate(self.steps):
-            yield {"algo": self.algo, "step": t,
-                   "upper_loss": self.upper_loss[i],
-                   "lower_loss": self.lower_loss[i],
-                   "consensus_x": self.consensus_x[i],
-                   "consensus_y": self.consensus_y[i],
-                   **{k: v[i] for k, v in self.extra.items()}}
+ALGOS = tuple(ALGORITHMS)
 
 
 def run(problem: BilevelProblem, cfg: HypergradConfig, hp: HParams,
@@ -52,72 +32,17 @@ def run(problem: BilevelProblem, cfg: HypergradConfig, hp: HParams,
         steps: int, seed: int = 0, eval_every: int = 10,
         init_batch_scale: int = 1,
         extra_metrics: Callable[[Any, Any], dict] | None = None,
-        x0: Any | None = None, y0: Any | None = None) -> RunResult:
+        x0: Any | None = None, y0: Any | None = None, *,
+        dispatch: str = "fused", mix_backend: str = "dense",
+        mesh=None) -> RunResult:
     """Run ``algo`` for ``steps`` iterations on ``problem`` over ``topo``.
 
     sample_batch(key) must return {'f','g','h'} with node axis K (and J axis
     on 'h'). eval_batch is a *global* batch (no node axis) for diagnostics.
     """
     assert algo in ALGOS, algo
-    K = topo.size
-    mix = dense_mix(topo.weights)
-    key = jax.random.PRNGKey(seed)
-    kx, ky, key = jax.random.split(key, 3)
-    X0 = replicate(problem.init_x(kx) if x0 is None else x0, K)
-    Y0 = replicate(problem.init_y(ky) if y0 is None else y0, K)
-
-    def node_keys(k):
-        return jax.random.split(k, K)
-
-    key, k0 = jax.random.split(key)
-    batch0 = sample_batch(k0)
-    keys0 = node_keys(k0)
-
-    if algo == "mdbo":
-        state = mdbo.init(problem, cfg, hp, mix, X0, Y0, batch0, keys0)
-        step_fn = partial(mdbo.step, problem, cfg, hp, mix)
-    elif algo == "vrdbo":
-        state = vrdbo.init(problem, cfg, hp, mix, X0, Y0, batch0, keys0)
-        step_fn = partial(vrdbo.step, problem, cfg, hp, mix)
-    elif algo == "dsbo":
-        state = baselines.dsbo_init(X0, Y0)
-        step_fn = partial(baselines.dsbo_step, problem, cfg, hp, mix)
-    else:
-        state = baselines.gdsbo_init(problem, cfg, hp, mix, X0, Y0,
-                                     batch0, keys0)
-        step_fn = partial(baselines.gdsbo_step, problem, cfg, hp, mix)
-
-    step_fn = jax.jit(step_fn)
-
-    @jax.jit
-    def evaluate(state):
-        xbar, ybar = node_mean(state.x), node_mean(state.y)
-        return {
-            "upper": problem.upper_loss(xbar, ybar, eval_batch),
-            "lower": problem.lower_loss(xbar, ybar, eval_batch),
-            "cx": consensus_error(state.x),
-            "cy": consensus_error(state.y),
-        }
-
-    res = RunResult(algo, [], [], [], [], [], {})
-    t0 = time.perf_counter()
-
-    def record(t, state):
-        m = evaluate(state)
-        res.steps.append(t)
-        res.upper_loss.append(float(m["upper"]))
-        res.lower_loss.append(float(m["lower"]))
-        res.consensus_x.append(float(m["cx"]))
-        res.consensus_y.append(float(m["cy"]))
-        if extra_metrics is not None:
-            for k, v in extra_metrics(state, eval_batch).items():
-                res.extra.setdefault(k, []).append(float(v))
-
-    record(0, state)
-    for t in range(1, steps + 1):
-        key, kb = jax.random.split(key)
-        state = step_fn(state, sample_batch(kb), node_keys(kb))
-        if t % eval_every == 0 or t == steps:
-            record(t, state)
-    res.wall_time_s = time.perf_counter() - t0
-    return res
+    eng = Engine(problem, cfg, hp, topo, algo=algo, mix=mix_backend,
+                 dispatch=dispatch, mesh=mesh)
+    return eng.run(sample_batch, eval_batch, steps=steps, seed=seed,
+                   eval_every=eval_every, init_batch_scale=init_batch_scale,
+                   extra_metrics=extra_metrics, x0=x0, y0=y0)

@@ -1,0 +1,416 @@
+"""Scan-fused execution engine for the decentralized bilevel algorithms.
+
+The engine is the single run substrate behind :mod:`repro.core.driver`,
+:mod:`repro.core.distributed` and :mod:`repro.train.decentral`:
+
+* **Dispatch** — ``fused`` compiles a whole eval interval (``eval_every``
+  steps) into ONE device program via :func:`jax.lax.scan`: state buffers are
+  donated between chunks and cheap consensus diagnostics are accumulated
+  in-scan, so the host touches the device once per interval instead of once
+  per step. ``per_step`` keeps the legacy one-jit-call-per-iteration loop
+  (the dispatch-overhead baseline measured in ``benchmarks/engine_bench.py``).
+* **Mix backends** — a registry of the communication primitive ``A ↦ W A``
+  selected by name: ``dense`` (einsum with the K×K mixing matrix),
+  ``ring_rolled`` (jnp.roll, W-free), ``ring_local`` (shard_map +
+  collective_permute; one node per mesh shard). Callers stop hand-rolling
+  their own mix construction.
+* **Key discipline** — every iteration consumes two *independent* subkeys,
+  one for the minibatch draw and one for the per-node Neumann truncation
+  level J̃, via :func:`key_schedule`. (The seed driver reused a single key
+  for both, correlating the batch and J̃ streams.)
+
+Samplers: ``sample_batch(key)`` that is pure JAX is sampled *inside* the
+scan (fully device-resident chunks). Host-side samplers (anything exposing
+``host_sampler = True``, e.g. :class:`repro.data.NodeSampler`) are drawn
+per-step on the host and stacked on a leading time axis the scan consumes —
+same program shape, batch generation stays on the host.
+
+Bitwise contract (tests/test_engine.py): a fused run of T steps is
+bit-identical to T per-step ``step_fn`` calls under the same key schedule,
+for every algorithm and every mix backend.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core import baselines, mdbo, vrdbo
+from repro.core.common import (HParams, consensus_error, node_mean,
+                               replicate)
+from repro.core.hypergrad import HypergradConfig
+from repro.core.problems import BilevelProblem
+from repro.core.topology import Topology, ring
+from repro.core.tracking import (MixFn, dense_mix, ring_mix_local,
+                                 ring_mix_rolled)
+
+Tree = Any
+
+try:  # jax >= 0.6 promotes shard_map; the kwarg was renamed check_rep->check_vma
+    _shard_map, _SM_NOCHECK = jax.shard_map, {"check_vma": False}
+except AttributeError:
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SM_NOCHECK = {"check_rep": False}
+
+
+def shard_map_compat(fn, mesh, in_specs, out_specs):
+    """Version-portable shard_map with replication checking disabled."""
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **_SM_NOCHECK)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm registry
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Algorithm:
+    """Uniform signature pair:
+    init(problem, cfg, hp, mix, X0, Y0, batch, keys) -> state
+    step(problem, cfg, hp, mix, state, batch, keys) -> state
+    """
+
+    init: Callable
+    step: Callable
+
+
+def _dsbo_init(problem, cfg, hp, mix, X0, Y0, batch, keys):
+    return baselines.dsbo_init(X0, Y0)
+
+
+ALGORITHMS: dict[str, Algorithm] = {
+    "mdbo": Algorithm(mdbo.init, mdbo.step),
+    "vrdbo": Algorithm(vrdbo.init, vrdbo.step),
+    "dsbo": Algorithm(_dsbo_init, baselines.dsbo_step),
+    "gdsbo": Algorithm(baselines.gdsbo_init, baselines.gdsbo_step),
+}
+
+
+# ---------------------------------------------------------------------------
+# Mix-backend registry
+# ---------------------------------------------------------------------------
+
+MIX_BACKENDS: dict[str, Callable[..., MixFn]] = {}
+
+
+def register_mix_backend(name: str):
+    def deco(builder):
+        MIX_BACKENDS[name] = builder
+        return builder
+    return deco
+
+
+@register_mix_backend("dense")
+def _dense_backend(*, weights=None, K: int | None = None,
+                   self_weight: float = 1.0 / 3.0, axis_name: str = "data"):
+    """Paper-faithful einsum with an explicit W (default: ring(K))."""
+    if weights is None:
+        if K is None:
+            raise ValueError("dense mix needs `weights` or `K`")
+        weights = ring(K, self_weight).weights
+    return dense_mix(weights)
+
+
+@register_mix_backend("ring_rolled")
+def _ring_rolled_backend(*, weights=None, K: int | None = None,
+                         self_weight: float = 1.0 / 3.0,
+                         axis_name: str = "data"):
+    """W-free ring via jnp.roll on the leading node axis."""
+    return ring_mix_rolled(self_weight)
+
+
+@register_mix_backend("ring_local")
+def _ring_local_backend(*, weights=None, K: int | None = None,
+                        self_weight: float = 1.0 / 3.0,
+                        axis_name: str = "data"):
+    """Per-shard ring via collective_permute; requires shard_map execution."""
+    return ring_mix_local(axis_name, self_weight, size=K)
+
+
+def make_mix(name: str, **kwargs) -> MixFn:
+    """Build a mixing operator from the backend registry.
+
+    kwargs: weights (dense), K (dense default ring), self_weight, axis_name
+    (ring_local).
+    """
+    try:
+        builder = MIX_BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown mix backend {name!r}; have {sorted(MIX_BACKENDS)}")
+    return builder(**kwargs)
+
+
+# ---------------------------------------------------------------------------
+# PRNG key schedule
+# ---------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnums=1)
+def key_schedule(key: jax.Array, steps: int):
+    """Per-iteration (batch, node/J̃) subkey pairs — two independent streams.
+
+    Returns (kbs, kns), each of shape (steps, *key). kbs[t] seeds the step-t
+    minibatch draw; kns[t] fans out into the K per-node J̃ keys. No key is
+    ever used for both purposes (regression-tested in tests/test_engine.py).
+    """
+    def body(k, _):
+        k, kb, kn = jax.random.split(k, 3)
+        return k, (kb, kn)
+
+    _, (kbs, kns) = jax.lax.scan(body, key, None, length=steps)
+    return kbs, kns
+
+
+# ---------------------------------------------------------------------------
+# Results container
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class RunResult:
+    algo: str
+    steps: list[int]
+    upper_loss: list[float]
+    lower_loss: list[float]
+    consensus_x: list[float]
+    consensus_y: list[float]
+    extra: dict[str, list[float]]
+    wall_time_s: float = 0.0
+
+    def as_rows(self):
+        for i, t in enumerate(self.steps):
+            yield {"algo": self.algo, "step": t,
+                   "upper_loss": self.upper_loss[i],
+                   "lower_loss": self.lower_loss[i],
+                   "consensus_x": self.consensus_x[i],
+                   "consensus_y": self.consensus_y[i],
+                   **{k: v[i] for k, v in self.extra.items()}}
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+class Engine:
+    """Unified run substrate: algorithm × mix backend × dispatch mode.
+
+    Parameters
+    ----------
+    topo: a :class:`Topology` (its W feeds the dense backend) or a bare node
+        count K.
+    algo: one of :data:`ALGORITHMS`.
+    mix: one of :data:`MIX_BACKENDS`. ``ring_local`` additionally needs
+        ``mesh`` (one node per shard of ``axis_name``).
+    dispatch: ``fused`` (lax.scan chunks of ``eval_every`` steps, donated
+        state) or ``per_step`` (legacy one-jit-call-per-step loop).
+    """
+
+    def __init__(self, problem: BilevelProblem, cfg: HypergradConfig,
+                 hp: HParams, topo: Topology | int, *, algo: str = "mdbo",
+                 mix: str = "dense", dispatch: str = "fused",
+                 self_weight: float = 1.0 / 3.0, axis_name: str = "data",
+                 mesh=None, donate: bool = True):
+        if isinstance(topo, Topology):
+            self.K, weights = topo.size, topo.weights
+        else:
+            self.K, weights = int(topo), None
+        if algo not in ALGORITHMS:
+            raise ValueError(f"unknown algo {algo!r}; have {sorted(ALGORITHMS)}")
+        if dispatch not in ("fused", "per_step"):
+            raise ValueError(f"dispatch must be fused|per_step, got {dispatch!r}")
+        if mix == "ring_local" and mesh is None:
+            raise ValueError("mix='ring_local' runs under shard_map and "
+                             "needs a mesh with axis `axis_name` of size K")
+        self.problem, self.cfg, self.hp = problem, cfg, hp
+        self.algo, self.mix_name, self.dispatch = algo, mix, dispatch
+        self.axis_name, self.mesh = axis_name, mesh
+        self.mix = make_mix(mix, weights=weights, K=self.K,
+                            self_weight=self_weight, axis_name=axis_name)
+        alg = ALGORITHMS[algo]
+        self._init_body = partial(alg.init, problem, cfg, hp, self.mix)
+        self._step_body = partial(alg.step, problem, cfg, hp, self.mix)
+        # buffer donation is a no-op (and warns) on CPU
+        self._donate = (0,) if donate and jax.default_backend() != "cpu" else ()
+        self._jit_cache: dict = {}
+
+    # -- building blocks ----------------------------------------------------
+
+    def _sharded(self, fn, n_in: int):
+        """Wrap an algorithm body in shard_map for the ring_local backend."""
+        if self.mix_name != "ring_local":
+            return fn
+        spec = P(self.axis_name)
+        return shard_map_compat(fn, self.mesh, (spec,) * n_in, spec)
+
+    def _cached(self, name: str, build: Callable):
+        if name not in self._jit_cache:
+            self._jit_cache[name] = build()
+        return self._jit_cache[name]
+
+    @property
+    def init(self):
+        """jit-ed init(X0, Y0, batch, keys) -> state."""
+        return self._cached("init", lambda: jax.jit(
+            self._sharded(self._init_body, 4)))
+
+    @property
+    def step(self):
+        """jit-ed step(state, batch, node_keys) -> state (per-step dispatch)."""
+        return self._cached("step", lambda: jax.jit(
+            self._sharded(self._step_body, 3)))
+
+    @property
+    def evaluate(self):
+        """jit-ed evaluate(state, eval_batch) -> {upper, lower, cx, cy}."""
+        def build():
+            def ev(state, eval_batch):
+                xbar, ybar = node_mean(state.x), node_mean(state.y)
+                return {
+                    "upper": self.problem.upper_loss(xbar, ybar, eval_batch),
+                    "lower": self.problem.lower_loss(xbar, ybar, eval_batch),
+                    "cx": consensus_error(state.x),
+                    "cy": consensus_error(state.y),
+                }
+            return jax.jit(ev)
+        return self._cached("evaluate", build)
+
+    def _make_chunk(self, sample_batch, host: bool):
+        """Scan-fused multi-step kernel. Three flavors:
+
+        * ring_local: shard_map(scan) over pre-stacked batches + node keys;
+        * host sampler: scan over pre-stacked batches, in-scan diagnostics;
+        * device sampler: sampling *inside* the scan — the whole eval
+          interval is one device program with no host round-trips.
+        """
+        K, step = self.K, self._step_body
+
+        if self.mix_name == "ring_local":
+            def chunk(state, batches, nkeys):
+                def body(s, x):
+                    b, nk = x
+                    return step(s, b, nk), None
+                return jax.lax.scan(body, state, (batches, nkeys))[0]
+
+            spec, tspec = P(self.axis_name), P(None, self.axis_name)
+            chunk = shard_map_compat(chunk, self.mesh,
+                                     (spec, tspec, tspec), spec)
+            return jax.jit(chunk, donate_argnums=self._donate)
+
+        if host:
+            def chunk(state, batches, nkeys):
+                def body(s, x):
+                    b, nk = x
+                    s = step(s, b, nk)
+                    return s, (consensus_error(s.x), consensus_error(s.y))
+                return jax.lax.scan(body, state, (batches, nkeys))
+        else:
+            def chunk(state, kbs, kns):
+                def body(s, kk):
+                    kb, kn = kk
+                    s = step(s, sample_batch(kb), jax.random.split(kn, K))
+                    return s, (consensus_error(s.x), consensus_error(s.y))
+                return jax.lax.scan(body, state, (kbs, kns))
+
+        return jax.jit(chunk, donate_argnums=self._donate)
+
+    def _chunk_fn(self, sample_batch, host: bool):
+        # keyed on the sampler OBJECT: the cache entry pins a strong
+        # reference so a recycled id() can never resurrect a chunk that
+        # closes over a dead sampler.
+        key = ("chunk", id(sample_batch), host)
+        hit = self._jit_cache.get(key)
+        if hit is None or hit[0] is not sample_batch:
+            self._jit_cache[key] = (sample_batch,
+                                    self._make_chunk(sample_batch, host))
+        return self._jit_cache[key][1]
+
+    def _stack_batches(self, sample_batch, kb_chunk, host: bool):
+        """Per-step batches stacked on a leading time axis for the scan."""
+        if host:
+            bs = [sample_batch(kb_chunk[i]) for i in range(kb_chunk.shape[0])]
+            return jax.tree.map(lambda *xs: jnp.stack(xs), *bs)
+        return jax.vmap(sample_batch)(kb_chunk)
+
+    # -- the run loop -------------------------------------------------------
+
+    def run(self, sample_batch: Callable[[jax.Array], Any], eval_batch: Any,
+            steps: int, seed: int = 0, eval_every: int = 10,
+            init_batch_scale: int = 1,
+            extra_metrics: Callable[[Any, Any], dict] | None = None,
+            x0: Any | None = None, y0: Any | None = None,
+            return_state: bool = False) -> RunResult:
+        """Run the configured algorithm for ``steps`` iterations.
+
+        sample_batch(key) must return {'f','g','h'} with node axis K (and J
+        axis on 'h'); eval_batch is a *global* batch for diagnostics.
+        """
+        del init_batch_scale  # accepted for API compatibility
+        K = self.K
+        host = bool(getattr(sample_batch, "host_sampler", False))
+
+        key = jax.random.PRNGKey(seed)
+        kx, ky, key = jax.random.split(key, 3)
+        X0 = replicate(self.problem.init_x(kx) if x0 is None else x0, K)
+        Y0 = replicate(self.problem.init_y(ky) if y0 is None else y0, K)
+
+        key, k0 = jax.random.split(key)
+        kb0, kn0 = jax.random.split(k0)  # independent batch / J̃ init keys
+        state = self.init(X0, Y0, sample_batch(kb0),
+                          jax.random.split(kn0, K))
+        kbs, kns = key_schedule(key, steps)
+
+        in_scan = self.dispatch == "fused" and self.mix_name != "ring_local"
+        res = RunResult(self.algo, [], [], [], [], [], {})
+        t0 = time.perf_counter()
+
+        def record(t, state, trace=None):
+            m = self.evaluate(state, eval_batch)
+            res.steps.append(t)
+            res.upper_loss.append(float(m["upper"]))
+            res.lower_loss.append(float(m["lower"]))
+            res.consensus_x.append(float(m["cx"]))
+            res.consensus_y.append(float(m["cy"]))
+            if in_scan:
+                # in-scan accumulated diagnostics: chunk-mean consensus
+                cx, cy = ((float(jnp.mean(trace[0])), float(jnp.mean(trace[1])))
+                          if trace is not None
+                          else (float(m["cx"]), float(m["cy"])))
+                res.extra.setdefault("scan_cx_mean", []).append(cx)
+                res.extra.setdefault("scan_cy_mean", []).append(cy)
+            if extra_metrics is not None:
+                for k, v in extra_metrics(state, eval_batch).items():
+                    res.extra.setdefault(k, []).append(float(v))
+
+        record(0, state)
+
+        if self.dispatch == "per_step":
+            for t in range(1, steps + 1):
+                state = self.step(state, sample_batch(kbs[t - 1]),
+                                  jax.random.split(kns[t - 1], K))
+                if t % eval_every == 0 or t == steps:
+                    record(t, state)
+        else:
+            chunk = self._chunk_fn(sample_batch, host)
+            t = 0
+            while t < steps:
+                n = min(eval_every, steps - t)
+                kb_c, kn_c = kbs[t:t + n], kns[t:t + n]
+                if self.mix_name == "ring_local":
+                    xs = self._stack_batches(sample_batch, kb_c, host)
+                    nk = jax.vmap(lambda k: jax.random.split(k, K))(kn_c)
+                    state, trace = chunk(state, xs, nk), None
+                elif host:
+                    xs = self._stack_batches(sample_batch, kb_c, host)
+                    nk = jax.vmap(lambda k: jax.random.split(k, K))(kn_c)
+                    state, trace = chunk(state, xs, nk)
+                else:
+                    state, trace = chunk(state, kb_c, kn_c)
+                t += n
+                record(t, state, trace)
+
+        res.wall_time_s = time.perf_counter() - t0
+        return (res, state) if return_state else res

@@ -1,9 +1,9 @@
 from repro.data.synthetic import (Dataset, NodeSampler, audio_stub,
                                   lm_batch, make_classification,
-                                  shard_to_nodes, shard_to_nodes_noniid,
-                                  train_val_split, vision_stub)
+                                  make_device_sampler, shard_to_nodes,
+                                  shard_to_nodes_noniid, train_val_split,
+                                  vision_stub)
 
 __all__ = ["Dataset", "NodeSampler", "audio_stub", "lm_batch",
-           "make_classification", "shard_to_nodes", "shard_to_nodes_noniid",
-           "train_val_split",
-           "vision_stub"]
+           "make_classification", "make_device_sampler", "shard_to_nodes",
+           "shard_to_nodes_noniid", "train_val_split", "vision_stub"]

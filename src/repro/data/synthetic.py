@@ -64,7 +64,14 @@ class NodeSampler:
 
     f: validation batch, g: training batch (ζ0), h: J fresh training batches
     (ζ_1..ζ_J) — faithful to the paper's i.i.d. Neumann sampling.
+
+    Draws come from a host-side numpy RNG (the ``key`` argument is ignored),
+    so the engine cannot trace this sampler into a scan: ``host_sampler``
+    tells it to pre-draw each chunk on the host and stack on a time axis.
+    For a fully device-resident run loop use :func:`make_device_sampler`.
     """
+
+    host_sampler = True
 
     def __init__(self, train_nodes, val_nodes, batch: int, J: int, seed: int = 0):
         self.tr, self.va = train_nodes, val_nodes
@@ -88,6 +95,35 @@ class NodeSampler:
         a = np.concatenate([d.a for d in self.va])[:n]
         b = np.concatenate([d.b for d in self.va])[:n]
         return {"a": jnp.asarray(a), "b": jnp.asarray(b)}
+
+
+def make_device_sampler(train_nodes: list[Dataset], val_nodes: list[Dataset],
+                        batch: int, J: int):
+    """jit-traceable :class:`NodeSampler` equivalent.
+
+    Node datasets live as device-resident (K, n_k, ·) stacks and every draw
+    is uniform-with-replacement via jax.random — a pure function of the key,
+    so the engine samples *inside* its scan-fused chunks (zero host
+    round-trips per eval interval).
+    """
+    tr_a = jnp.stack([jnp.asarray(d.a) for d in train_nodes])
+    tr_b = jnp.stack([jnp.asarray(d.b) for d in train_nodes])
+    va_a = jnp.stack([jnp.asarray(d.a) for d in val_nodes])
+    va_b = jnp.stack([jnp.asarray(d.b) for d in val_nodes])
+    K = tr_a.shape[0]
+
+    def draw(key, feats, labels):
+        idx = jax.random.randint(key, (K, batch), 0, feats.shape[1])
+        return {"a": jax.vmap(lambda f, i: f[i])(feats, idx),
+                "b": jax.vmap(lambda l, i: l[i])(labels, idx)}
+
+    def sample(key):
+        kf, kg, kh = jax.random.split(key, 3)
+        h = jax.vmap(lambda k: draw(k, tr_a, tr_b))(jax.random.split(kh, J))
+        return {"f": draw(kf, va_a, va_b), "g": draw(kg, tr_a, tr_b),
+                "h": jax.tree.map(lambda t: jnp.swapaxes(t, 0, 1), h)}
+
+    return sample
 
 
 # ---------------------------------------------------------------------------

@@ -5,6 +5,15 @@ from __future__ import annotations
 import jax
 
 
+def _mesh(shape, axes, devices):
+    """jax.make_mesh across versions: axis_types only exists on jax >= 0.5."""
+    if hasattr(jax.sharding, "AxisType"):
+        return jax.make_mesh(
+            shape, axes, devices=devices,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, devices=devices)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: (data=16, model=16) = 256 chips.
     Multi-pod:  (pod=2, data=16, model=16) = 512 chips.
@@ -20,8 +29,7 @@ def make_production_mesh(*, multi_pod: bool = False):
         raise RuntimeError(
             f"need {n} devices, have {len(devices)} — run under "
             f"XLA_FLAGS=--xla_force_host_platform_device_count=512")
-    return jax.make_mesh(shape, axes, devices=devices[:n],
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes, devices[:n])
 
 
 def make_debug_mesh(*, multi_pod: bool = False, data: int = 2, model: int = 2):
@@ -31,5 +39,4 @@ def make_debug_mesh(*, multi_pod: bool = False, data: int = 2, model: int = 2):
     n = 1
     for s in shape:
         n *= s
-    return jax.make_mesh(shape, axes, devices=jax.devices()[:n],
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _mesh(shape, axes, jax.devices()[:n])

@@ -74,8 +74,13 @@ class ServeEngine:
             tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
             for r, t in zip(reqs, np.asarray(tok[:, 0])):
                 r.output.append(int(t))
+                if self.eos_id is not None and int(t) == self.eos_id:
+                    r.done = True  # prefill-produced token can already be EOS
             steps = max(r.max_new_tokens for r in reqs) - 1
             for _ in range(max(steps, 0)):
+                if all(r.done or len(r.output) >= r.max_new_tokens
+                       for r in reqs):
+                    break  # every request finished — stop burning decode steps
                 tok, _, cache = self._decode(self.params, tok, cache)
                 for i, r in enumerate(reqs):
                     if not r.done and len(r.output) < r.max_new_tokens:

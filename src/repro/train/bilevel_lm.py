@@ -11,9 +11,9 @@ regularizer:
 Because ∇²_{xy} g touches only the regularizer, the cross term of the
 hypergradient is cheap; the Neumann HVPs dominate (J per step).
 
-Deviation from the paper (documented in DESIGN.md §3): the J Neumann samples
-reuse the step's training batch ('h' leaves are broadcast views, not fresh
-draws) to keep the input pipeline at 2 batches/step at 314B scale.
+The J Neumann minibatches ζ_1..ζ_J are i.i.d. fresh draws (Eq. 4) — see
+``repro.train.decentral.make_step_batch``; the synthetic token stream makes
+the extra J batches/step free, so the earlier broadcast-view shortcut is gone.
 """
 from __future__ import annotations
 
@@ -75,9 +75,3 @@ def make_lm_bilevel_problem(cfg: ModelConfig, *, lip_gy: float = 20.0,
         init_x=lambda k: jnp.full((x_dim(cfg),), -4.0, jnp.float32),
         init_y=lambda k: init_params(cfg, k),
         lip_gy=lip_gy, mu=mu)
-
-
-def broadcast_neumann(batch, J: int):
-    """'h' = J broadcast views of the training batch (see module docstring)."""
-    return jax.tree.map(
-        lambda t: jnp.broadcast_to(t[None], (J,) + t.shape), batch)

@@ -18,20 +18,17 @@ from functools import partial
 from typing import Any
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import ArchSpec
 from repro.configs.registry import InputShape
 from repro.core import mdbo, vrdbo
 from repro.core.common import HParams
+from repro.core.engine import make_mix as make_engine_mix
 from repro.core.hypergrad import HypergradConfig
-from repro.core.tracking import dense_mix, ring_mix_rolled
-from repro.core.topology import ring
 from repro.data.synthetic import lm_batch
 from repro.models import init_params, loss_fn
 from repro.models.config import ModelConfig
-from repro.train.bilevel_lm import (broadcast_neumann, make_lm_bilevel_problem,
-                                    x_dim)
+from repro.train.bilevel_lm import make_lm_bilevel_problem, x_dim
 
 Tree = Any
 
@@ -40,7 +37,7 @@ Tree = Any
 class TrainerConfig:
     algo: str = "mdbo"            # mdbo | vrdbo | gt_sgd
     J: int = 2                    # Neumann terms at LM scale (logreg uses 10)
-    mix: str = "dense"            # dense | ring  (ring = collective_permute)
+    mix: str = "dense"            # engine mix backend; 'ring' = ring_rolled
     hp: HParams = dataclasses.field(default_factory=lambda: HParams(
         eta=0.1, alpha1=1.0, alpha2=1.0, beta1=0.05, beta2=0.5))
 
@@ -56,11 +53,14 @@ def node_axis_name(spec: ArchSpec) -> str:
 
 
 def make_mix(tc: TrainerConfig, K: int):
+    """Resolve tc.mix through the engine's mix-backend registry.
+
+    'ring' is kept as an alias of the registry's 'ring_rolled' backend;
+    'dense' builds the ring-W einsum (the paper-faithful default)."""
     if K == 1:
         return lambda tree: tree
-    if tc.mix == "ring":
-        return ring_mix_rolled()
-    return dense_mix(ring(K).weights)
+    name = {"ring": "ring_rolled"}.get(tc.mix, tc.mix)
+    return make_engine_mix(name, K=K)
 
 
 def make_step_fns(model_cfg: ModelConfig, tc: TrainerConfig):
@@ -90,9 +90,14 @@ def _gt_sgd_fns(model_cfg: ModelConfig, tc: TrainerConfig):
             lambda yy: loss_fn(model_cfg, yy, b))(y))(Y, batch["g"])
 
     def init(mix, X0, Y0, batch, keys):
+        from repro.core.hypergrad import tree_zeros_like
         dg = grads(Y0, batch, keys)
         y1 = param_update(Y0, dg, tc.hp.eta, tc.hp.beta2, mix)
-        return mdbo.MDBOState(x=X0, y=y1, u=X0, v=dg, zf=X0, zg=dg)
+        # the upper level is inert in this ablation: its estimator/tracker
+        # slots must be zero, not copies of X0, or diagnostics that read
+        # estimator norms report parameter magnitudes.
+        return mdbo.MDBOState(x=X0, y=y1, u=tree_zeros_like(X0), v=dg,
+                              zf=tree_zeros_like(X0), zg=dg)
 
     def step(mix, state, batch, keys):
         dg = grads(state.y, batch, keys)
@@ -134,15 +139,16 @@ def make_node_batch(cfg: ModelConfig, key, per_node: int, seq: int):
 
 def make_step_batch(cfg: ModelConfig, tc: TrainerConfig, key, K: int,
                     per_node: int, seq: int):
-    """{'f','g','h'} with node axis K. 'h' is a broadcast view of 'g'."""
-    kf, kg = jax.random.split(key)
+    """{'f','g','h'} with node axis K. The J Hessian minibatches ζ_1..ζ_J on
+    'h' (leading axes (K, J)) are i.i.d. fresh draws, as Eq. 4 requires —
+    each from its own subkey, independent of the ξ/ζ0 draws."""
+    kf, kg, kh = jax.random.split(key, 3)
     stack = lambda kk: jax.vmap(
         lambda k: make_node_batch(cfg, k, per_node, seq))(
             jax.random.split(kk, K))
     f, g = stack(kf), stack(kg)
-    h = jax.vmap(lambda t: broadcast_neumann(t, tc.J), in_axes=0)(g) \
-        if False else jax.tree.map(
-            lambda t: jnp.broadcast_to(t[:, None], (K, tc.J) + t.shape[1:]), g)
+    h = jax.vmap(jax.vmap(lambda k: make_node_batch(cfg, k, per_node, seq)))(
+        jax.random.split(kh, (K, tc.J)))
     return {"f": f, "g": g, "h": h}
 
 

@@ -24,8 +24,7 @@ K, J = 4, 4
 prob, _ = quadratic_problem(dx=3, dy=5, noise=0.0)
 hcfg = HypergradConfig(J=J, lip_gy=prob.lip_gy, randomize=True)
 hp = HParams(eta=0.1, beta1=0.05, beta2=0.2)
-mesh = jax.make_mesh((4,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = jax.make_mesh((4,), ("data",))
 
 def batch_for(key):
     kf, kg, kh = jax.random.split(key, 3)

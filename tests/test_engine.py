@@ -1,0 +1,169 @@
+"""The engine's bitwise contract + PRNG key hygiene.
+
+A scan-fused run of T steps must be bit-identical to T per-step ``step_fn``
+dispatches under the same key schedule — for MDBO and VRDBO, on the paper's
+logreg workload, across all three mix backends (``ring_local`` runs in a
+subprocess with forced host devices, like tests/test_distributed.py).
+"""
+import os
+import subprocess
+import sys
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (HParams, HypergradConfig, logreg_hyperopt, mdbo,
+                        ring)
+from repro.core.common import replicate
+from repro.core.engine import Engine, key_schedule, make_mix
+from repro.data import (NodeSampler, make_classification, make_device_sampler,
+                        shard_to_nodes, train_val_split)
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+K, D, J = 4, 12, 3
+
+
+@pytest.fixture(scope="module")
+def setup():
+    ds = make_classification(n=800, d=D, c=2, seed=1)
+    tr, va = train_val_split(ds, 0.3, seed=1)
+    tr_nodes, va_nodes = shard_to_nodes(tr, K), shard_to_nodes(va, K)
+    sample = make_device_sampler(tr_nodes, va_nodes, batch=16, J=J)
+    prob = logreg_hyperopt(d=D, c=2, lip_gy=5.0)
+    cfg = HypergradConfig(J=J, lip_gy=5.0, randomize=True)
+    hp = HParams(eta=0.1)
+    eval_batch = {"a": jnp.asarray(va.a[:128]), "b": jnp.asarray(va.b[:128])}
+    return prob, cfg, hp, sample, eval_batch, (tr_nodes, va_nodes)
+
+
+def _assert_trees_bitwise_equal(a, b):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+@pytest.mark.parametrize("seed", [0, 3])
+@pytest.mark.parametrize("mix", ["dense", "ring_rolled"])
+@pytest.mark.parametrize("algo", ["mdbo", "vrdbo"])
+def test_fused_bitwise_equals_per_step(setup, algo, mix, seed):
+    """7 steps with eval_every=3 exercises full AND partial scan chunks."""
+    prob, cfg, hp, sample, eval_batch, _ = setup
+    out = {}
+    for dispatch in ("fused", "per_step"):
+        eng = Engine(prob, cfg, hp, ring(K), algo=algo, mix=mix,
+                     dispatch=dispatch)
+        out[dispatch] = eng.run(sample, eval_batch, steps=7, eval_every=3,
+                                seed=seed, return_state=True)
+    (rf, sf), (rp, sp) = out["fused"], out["per_step"]
+    _assert_trees_bitwise_equal(sf, sp)
+    assert rf.steps == rp.steps == [0, 3, 6, 7]
+    assert rf.upper_loss == rp.upper_loss  # recorded floats, exactly
+    assert rf.consensus_x == rp.consensus_x
+
+
+def test_fused_matches_manual_step_fn_loop(setup):
+    """The fused path == a hand-rolled loop of raw mdbo.step calls."""
+    prob, cfg, hp, sample, eval_batch, _ = setup
+    steps = 5
+    eng = Engine(prob, cfg, hp, ring(K), algo="mdbo", mix="dense")
+    _, st_fused = eng.run(sample, eval_batch, steps=steps, eval_every=steps,
+                          seed=7, return_state=True)
+
+    mix = make_mix("dense", weights=ring(K).weights)
+    key = jax.random.PRNGKey(7)
+    kx, ky, key = jax.random.split(key, 3)
+    X0 = replicate(prob.init_x(kx), K)
+    Y0 = replicate(prob.init_y(ky), K)
+    key, k0 = jax.random.split(key)
+    kb0, kn0 = jax.random.split(k0)
+    init_fn = jax.jit(partial(mdbo.init, prob, cfg, hp, mix))
+    st = init_fn(X0, Y0, sample(kb0), jax.random.split(kn0, K))
+    kbs, kns = key_schedule(key, steps)
+    step_fn = jax.jit(partial(mdbo.step, prob, cfg, hp, mix))
+    for t in range(steps):
+        st = step_fn(st, sample(kbs[t]), jax.random.split(kns[t], K))
+    _assert_trees_bitwise_equal(st_fused, st)
+
+
+def test_host_sampler_fused_bitwise_equals_per_step(setup):
+    """NodeSampler (numpy RNG) goes through the pre-stacked chunk path."""
+    prob, cfg, hp, _, _, (tr_nodes, va_nodes) = setup
+    out = {}
+    for dispatch in ("fused", "per_step"):
+        sampler = NodeSampler(tr_nodes, va_nodes, batch=16, J=J, seed=0)
+        eng = Engine(prob, cfg, hp, ring(K), algo="mdbo", dispatch=dispatch)
+        out[dispatch] = eng.run(sampler, sampler.eval_batch(128), steps=7,
+                                eval_every=3, seed=0, return_state=True)[1]
+    _assert_trees_bitwise_equal(out["fused"], out["per_step"])
+
+
+def test_key_schedule_batch_and_jtilde_streams_differ():
+    """Regression for the seed driver's key reuse: the minibatch stream and
+    the per-node J̃ stream must never share a key (nor repeat one)."""
+    kbs, kns = key_schedule(jax.random.PRNGKey(0), 32)
+    allk = np.concatenate([np.asarray(kbs), np.asarray(kns)])
+    assert len(np.unique(allk, axis=0)) == 64
+
+
+def test_init_batch_and_node_keys_differ(setup):
+    """The t=0 batch draw and node-key fan-out use independent subkeys."""
+    prob, cfg, hp, sample, eval_batch, _ = setup
+    seen = []
+
+    def spy(key):
+        seen.append(np.asarray(key))
+        return sample(key)
+
+    eng = Engine(prob, cfg, hp, ring(K), algo="mdbo", dispatch="per_step")
+    eng.run(spy, eval_batch, steps=1, eval_every=1, seed=0)
+    key = jax.random.PRNGKey(0)
+    _, _, key = jax.random.split(key, 3)
+    _, k0 = jax.random.split(key)
+    kb0, kn0 = jax.random.split(k0)
+    np.testing.assert_array_equal(seen[0], np.asarray(kb0))
+    assert not np.array_equal(seen[0], np.asarray(kn0))
+
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import HParams, HypergradConfig, quadratic_problem, ring
+from repro.core.engine import Engine
+
+K, J = 4, 4
+prob, _ = quadratic_problem(dx=3, dy=5, noise=0.05)
+cfg = HypergradConfig(J=J, lip_gy=prob.lip_gy)
+hp = HParams(eta=0.1, beta1=0.05, beta2=0.2)
+
+def sample_batch(k):
+    kf, kg, kh = jax.random.split(k, 3)
+    return {"f": jax.random.split(kf, K), "g": jax.random.split(kg, K),
+            "h": jax.vmap(lambda kk: jax.random.split(kk, J))(
+                jax.random.split(kh, K))}
+
+mesh = jax.make_mesh((4,), ("data",))
+states = {}
+for dispatch in ("fused", "per_step"):
+    eng = Engine(prob, cfg, hp, ring(K), algo="mdbo", mix="ring_local",
+                 dispatch=dispatch, mesh=mesh)
+    _, states[dispatch] = eng.run(sample_batch, jax.random.PRNGKey(9),
+                                  steps=7, eval_every=3, seed=1,
+                                  return_state=True)
+for a, b in zip(jax.tree.leaves(states["fused"]),
+                jax.tree.leaves(states["per_step"])):
+    assert np.array_equal(np.asarray(a), np.asarray(b))
+print("ENGINE_RING_LOCAL_OK")
+"""
+
+
+@pytest.mark.slow
+def test_ring_local_fused_bitwise_equals_per_step():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, env=env, cwd=ROOT, timeout=600)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "ENGINE_RING_LOCAL_OK" in r.stdout

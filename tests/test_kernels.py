@@ -2,6 +2,8 @@
 import jax
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis", reason="property sweeps need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import (attention_ref, flash_attention, rglru_ref,

@@ -1,0 +1,57 @@
+"""ServeEngine EOS handling: prefill-produced EOS + early decode exit."""
+import jax
+import pytest
+
+from repro.configs import get
+from repro.models import init_params
+from repro.serve import ServeEngine
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get("smollm-360m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+PROMPT = [5, 9, 2, 7]
+
+
+def _greedy_tokens(cfg, params, n):
+    eng = ServeEngine(cfg, params, capacity=32, max_batch=2)
+    rid = eng.submit(PROMPT, max_new_tokens=n)
+    return eng.run()[rid]
+
+
+def _counting_engine(cfg, params, eos_id):
+    eng = ServeEngine(cfg, params, capacity=32, max_batch=2, eos_id=eos_id)
+    calls = {"n": 0}
+    orig = eng._decode
+
+    def counted(*args):
+        calls["n"] += 1
+        return orig(*args)
+
+    eng._decode = counted
+    return eng, calls
+
+
+def test_prefill_token_eos_is_checked(model):
+    """Regression: the prefill-produced first token was never EOS-checked."""
+    cfg, params = model
+    t0 = _greedy_tokens(cfg, params, 1)[0]
+    eng, calls = _counting_engine(cfg, params, eos_id=t0)
+    rid = eng.submit(PROMPT, max_new_tokens=8)
+    assert eng.run()[rid] == [t0]
+    assert calls["n"] == 0  # no decode step should run at all
+
+
+def test_decode_loop_exits_when_all_done(model):
+    """Regression: done requests kept consuming decode iterations."""
+    cfg, params = model
+    t0, t1 = _greedy_tokens(cfg, params, 2)
+    assert t0 != t1, "greedy stream degenerate; pick a different prompt"
+    eng, calls = _counting_engine(cfg, params, eos_id=t1)
+    rid = eng.submit(PROMPT, max_new_tokens=8)
+    assert eng.run()[rid] == [t0, t1]
+    assert calls["n"] == 1  # EOS at the first decode step ends the loop

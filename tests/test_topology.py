@@ -1,6 +1,8 @@
 """Assumption 1 (mixing matrix) properties, incl. hypothesis sweeps."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property sweeps need hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import topology

@@ -33,6 +33,34 @@ def test_lm_trainer_variant_steps(algo):
     assert bool(jnp.isfinite(loss))
 
 
+def test_step_batch_neumann_draws_are_iid():
+    """Eq. 4 requires fresh ζ_1..ζ_J — 'h' must not be broadcast views of ζ0."""
+    cfg = get("smollm-360m").reduced()
+    tc = TrainerConfig(J=2)
+    b = make_step_batch(cfg, tc, jax.random.PRNGKey(0), K, per_node=1, seq=SEQ)
+    toks = b["h"]["tokens"]
+    assert toks.shape[:2] == (K, tc.J)
+    assert not jnp.array_equal(toks[0, 0], toks[0, 1])       # i.i.d. over J
+    assert not jnp.array_equal(toks[0, 0], b["g"]["tokens"][0])  # fresh vs ζ0
+    assert not jnp.array_equal(toks[0, 0], toks[1, 0])       # and over nodes
+
+
+def test_gt_sgd_init_estimators_start_at_zero():
+    """Regression: init used to stuff X0 into the u/zf estimator slots,
+    poisoning any diagnostic that reads estimator norms."""
+    cfg = get("smollm-360m").reduced()
+    tc = TrainerConfig(algo="gt_sgd", J=1)
+    problem, init_fn, _ = make_step_fns(cfg, tc)
+    mix = make_mix(tc, K)
+    key = jax.random.PRNGKey(0)
+    X0 = replicate(problem.init_x(key), K)
+    Y0 = replicate(problem.init_y(key), K)
+    batch = make_step_batch(cfg, tc, key, K, per_node=1, seq=SEQ)
+    st = init_fn(mix, X0, Y0, batch, jax.random.split(key, K))
+    for leaf in jax.tree.leaves(st.u) + jax.tree.leaves(st.zf):
+        assert not jnp.any(leaf), "estimator slots must start at zero"
+
+
 def test_vrdbo_state_carries_previous_iterate():
     cfg = get("smollm-360m").reduced()
     tc = TrainerConfig(algo="vrdbo", J=1)
