@@ -1,53 +1,43 @@
 """Communication-compression ablation (beyond-paper; cf. Koloskova et al. in
 the paper's related work): MDBO with top-k-compressed gossip at several keep
-ratios — bytes per round vs final loss."""
+ratios — bytes per round vs final loss.
+
+Runs through the Engine's registered ``compressed_topk`` mix backend with
+fused dispatch (one scan-fused device program per eval interval), so the
+compressed runs get the same execution substrate as every other run path
+instead of a hand-rolled per-step loop."""
 from __future__ import annotations
 
-import time
-from functools import partial
-
-import jax
-
-from benchmarks.common import PAPER_HP, build
-from repro.core import mdbo
-from repro.core.common import consensus_error, node_mean, replicate
-from repro.core.compression import (comm_bytes_per_mix, compressed_mix,
-                                    topk_sparsify)
-from repro.core.tracking import dense_mix
+from benchmarks.common import J, PAPER_HP, build
+from repro.core.compression import comm_bytes_per_mix
+from repro.core.engine import Engine
+from repro.data import make_device_sampler
 
 
 def main(steps: int = 40, K: int = 8, dataset: str = "a9a-syn"):
     rows = []
     for ratio in (1.0, 0.25, 0.05):
         prob, cfg, sampler, topo = build(dataset, K)
-        hp = PAPER_HP["mdbo"]
+        sample = make_device_sampler(sampler.tr, sampler.va,
+                                     batch=sampler.batch, J=J)
+        eval_batch = sampler.eval_batch()
         if ratio >= 1.0:
-            mix = dense_mix(topo.weights)
+            mix, mix_kwargs = "dense", None
         else:
-            mix = compressed_mix(topo.weights, topk_sparsify(ratio))
-        key = jax.random.PRNGKey(0)
-        X0 = replicate(prob.init_x(key), K)
-        Y0 = replicate(prob.init_y(key), K)
-        from repro.core.hypergrad import HypergradConfig
-        hc = cfg
-        batch = sampler()
-        st = mdbo.init(prob, hc, hp, mix, X0, Y0, batch,
-                       jax.random.split(key, K))
-        stepf = jax.jit(partial(mdbo.step, prob, hc, hp, mix))
-        t0 = time.perf_counter()
-        for _ in range(steps):
-            key, kb = jax.random.split(key)
-            st = stepf(st, sampler(), jax.random.split(kb, K))
-        us = (time.perf_counter() - t0) / steps * 1e6
-        loss = float(prob.upper_loss(node_mean(st.x), node_mean(st.y),
-                                     sampler.eval_batch()))
-        comm = comm_bytes_per_mix(st.y, ratio)
+            mix, mix_kwargs = "compressed_topk", {"ratio": ratio}
+        eng = Engine(prob, cfg, PAPER_HP["mdbo"], topo, algo="mdbo",
+                     mix=mix, dispatch="fused", mix_kwargs=mix_kwargs)
+        res, state = eng.run(sample, eval_batch, steps=steps, seed=0,
+                             eval_every=max(steps // 2, 1),
+                             return_state=True)
+        us = res.wall_time_s / steps * 1e6
+        comm = comm_bytes_per_mix(state.y, ratio, W=topo.weights)
         rows.append({
             "name": f"compress/topk{ratio}/K{K}",
             "us_per_call": round(us, 1),
-            "derived": (f"final_loss={loss:.4f};"
+            "derived": (f"final_loss={res.upper_loss[-1]:.4f};"
                         f"y_comm_bytes_per_round={comm};"
-                        f"consensus={float(consensus_error(st.x)):.2e}"),
+                        f"consensus={res.consensus_x[-1]:.2e}"),
         })
     return rows
 

@@ -22,7 +22,7 @@ def main() -> None:
     from benchmarks import (engine_bench, fig1_loss_curves, fig2_accuracy,
                             fig3_speedup, fig_compression, fig_noniid,
                             fig_topology, hypergrad_bench, mixing_bench,
-                            roofline_table)
+                            roofline_table, serve_bench)
 
     rows = []
     rows += fig1_loss_curves.main(steps=steps)
@@ -36,6 +36,7 @@ def main() -> None:
     rows += mixing_bench.main()
     rows += hypergrad_bench.main()
     rows += roofline_table.main()
+    rows += serve_bench.main(n_requests=9 if args.quick else 18)
 
     print("name,us_per_call,steps_per_sec,derived")
     for r in rows:

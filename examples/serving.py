@@ -1,7 +1,10 @@
-"""Batched serving demo: submit a mixed queue of requests against any of the
-assigned architectures (reduced variants on CPU) and stream greedy decodes.
+"""Continuous-batching serving demo: submit a mixed-length queue of requests
+against any of the assigned architectures (reduced variants on CPU) and let
+the slot scheduler stream greedy decodes — short requests finish and their
+slots are refilled while long ones keep decoding.
 
   PYTHONPATH=src python examples/serving.py --arch rwkv6-1.6b --requests 6
+  PYTHONPATH=src python examples/serving.py --mode cohort   # legacy baseline
 """
 import argparse
 import time
@@ -19,25 +22,34 @@ def main():
     ap.add_argument("--arch", default="recurrentgemma-2b")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--mode", choices=("continuous", "cohort"),
+                    default="continuous")
     args = ap.parse_args()
 
     cfg = get(args.arch).reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
     print(f"{cfg.name} (reduced: {param_count(params):,} params, "
-          f"family={cfg.family})")
-    engine = ServeEngine(cfg, params, capacity=64, max_batch=4)
+          f"family={cfg.family}, mode={args.mode})")
+    engine = ServeEngine(cfg, params, capacity=64, max_batch=4,
+                         mode=args.mode, decode_chunk=4)
 
+    # mixed-length workload: short and long prompts, varied token budgets —
+    # the case where continuous batching wins (a cohort would idle every
+    # short request's slot until the longest one finishes)
     rng = np.random.default_rng(0)
-    for _ in range(args.requests):
-        engine.submit(rng.integers(0, cfg.vocab, size=rng.integers(3, 12)),
-                      max_new_tokens=args.max_new)
+    for i in range(args.requests):
+        prompt = rng.integers(0, cfg.vocab, size=rng.integers(3, 12))
+        budget = int(rng.integers(2, args.max_new + 1))
+        engine.submit(prompt, max_new_tokens=budget)
     t0 = time.time()
     results = engine.run()
     dt = time.time() - t0
     for rid, toks in sorted(results.items()):
         print(f"  request {rid}: {toks}")
     n = sum(len(v) for v in results.values())
-    print(f"{n} tokens / {dt:.2f}s = {n / dt:.1f} tok/s (CPU, batched)")
+    print(f"{n} tokens / {dt:.2f}s = {n / dt:.1f} tok/s (CPU, {args.mode})")
+    if engine.stats:
+        print("  " + ", ".join(f"{k}={v}" for k, v in engine.stats.items()))
 
 
 if __name__ == "__main__":

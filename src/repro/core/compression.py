@@ -13,12 +13,24 @@ bytes-vs-convergence tradeoff; not enabled in the paper-faithful baselines.
 """
 from __future__ import annotations
 
+import hashlib
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.tracking import MixFn
+
+
+def _path_seed(path) -> int:
+    """Stable 31-bit digest of a pytree key path.
+
+    Python's ``hash(str(path))`` is salted per process (PYTHONHASHSEED), so
+    keys derived from it made compressed runs irreproducible across
+    processes; blake2s is deterministic everywhere."""
+    digest = hashlib.blake2s(jax.tree_util.keystr(path).encode()).digest()
+    return int.from_bytes(digest[:4], "little") % (2 ** 31)
 
 
 def topk_sparsify(ratio: float) -> Callable:
@@ -50,7 +62,7 @@ def random_sparsify(ratio: float, seed: int = 0) -> Callable:
         def leaf(path, a):
             if ratio >= 1.0:
                 return a
-            key = jax.random.PRNGKey(abs(hash(str(path))) % (2 ** 31) + seed)
+            key = jax.random.fold_in(jax.random.PRNGKey(seed), _path_seed(path))
             mask = jax.random.bernoulli(key, ratio, a.shape)
             return (a * mask / ratio).astype(a.dtype)
         return jax.tree_util.tree_map_with_path(leaf, tree)
@@ -75,13 +87,26 @@ def compressed_mix(W, compressor: Callable) -> MixFn:
     return mix
 
 
-def comm_bytes_per_mix(tree, ratio: float) -> int:
-    """Communicated payload per gossip round per node (2 neighbors on a
-    ring): 2 · ratio · (values + indices)."""
+def neighbor_degree(W) -> int:
+    """Max number of neighbors a node sends to under mixing matrix W: the
+    count of nonzero off-diagonal entries in its densest row."""
+    Wn = np.asarray(W)
+    off = (np.abs(Wn) > 0) & ~np.eye(Wn.shape[0], dtype=bool)
+    return int(off.sum(axis=1).max())
+
+
+def comm_bytes_per_mix(tree, ratio: float, W=None) -> int:
+    """Communicated payload per gossip round per node:
+    degree · ratio · (values + indices).
+
+    The neighbor degree comes from the mixing matrix ``W`` (nonzero
+    off-diagonal entries per row); W=None assumes the 2-neighbor ring the
+    paper benchmarks on."""
+    degree = 2 if W is None else neighbor_degree(W)
     total = 0
     for a in jax.tree.leaves(tree):
         d = a.size // a.shape[0]
         kept = max(int(d * ratio), 1)
         per_entry = a.dtype.itemsize + (4 if ratio < 1.0 else 0)  # + index
-        total += 2 * kept * per_entry
+        total += degree * kept * per_entry
     return total

@@ -12,8 +12,10 @@ The engine is the single run substrate behind :mod:`repro.core.driver`,
 * **Mix backends** — a registry of the communication primitive ``A ↦ W A``
   selected by name: ``dense`` (einsum with the K×K mixing matrix),
   ``ring_rolled`` (jnp.roll, W-free), ``ring_local`` (shard_map +
-  collective_permute; one node per mesh shard). Callers stop hand-rolling
-  their own mix construction.
+  collective_permute; one node per mesh shard), and the compressed-gossip
+  operators ``compressed_topk`` / ``compressed_rand`` (A + (W−I)·C(A); pass
+  the keep fraction via ``mix_kwargs={'ratio': ...}``). Callers stop
+  hand-rolling their own mix construction.
 * **Key discipline** — every iteration consumes two *independent* subkeys,
   one for the minibatch draw and one for the per-node Neumann truncation
   level J̃, via :func:`key_schedule`. (The seed driver reused a single key
@@ -132,11 +134,42 @@ def _ring_local_backend(*, weights=None, K: int | None = None,
     return ring_mix_local(axis_name, self_weight, size=K)
 
 
+def _compression_weights(weights, K, self_weight):
+    if weights is not None:
+        return weights
+    if K is None:
+        raise ValueError("compressed mix needs `weights` or `K`")
+    return ring(K, self_weight).weights
+
+
+@register_mix_backend("compressed_topk")
+def _compressed_topk_backend(*, weights=None, K: int | None = None,
+                             self_weight: float = 1.0 / 3.0,
+                             axis_name: str = "data", ratio: float = 0.25):
+    """Compressed gossip A + (W−I)·topk(A): only the top ``ratio`` fraction
+    of entries (by magnitude, per node/leaf) crosses the network."""
+    from repro.core.compression import compressed_mix, topk_sparsify
+    W = _compression_weights(weights, K, self_weight)
+    return compressed_mix(W, topk_sparsify(ratio))
+
+
+@register_mix_backend("compressed_rand")
+def _compressed_rand_backend(*, weights=None, K: int | None = None,
+                             self_weight: float = 1.0 / 3.0,
+                             axis_name: str = "data", ratio: float = 0.25,
+                             seed: int = 0):
+    """Compressed gossip with the unbiased random sparsifier (keys are a
+    stable digest of the leaf path — reproducible across processes)."""
+    from repro.core.compression import compressed_mix, random_sparsify
+    W = _compression_weights(weights, K, self_weight)
+    return compressed_mix(W, random_sparsify(ratio, seed=seed))
+
+
 def make_mix(name: str, **kwargs) -> MixFn:
     """Build a mixing operator from the backend registry.
 
-    kwargs: weights (dense), K (dense default ring), self_weight, axis_name
-    (ring_local).
+    kwargs: weights (dense / compressed_*), K (default-ring fallback),
+    self_weight, axis_name (ring_local), ratio / seed (compressed_*).
     """
     try:
         builder = MIX_BACKENDS[name]
@@ -213,7 +246,8 @@ class Engine:
                  hp: HParams, topo: Topology | int, *, algo: str = "mdbo",
                  mix: str = "dense", dispatch: str = "fused",
                  self_weight: float = 1.0 / 3.0, axis_name: str = "data",
-                 mesh=None, donate: bool = True):
+                 mesh=None, donate: bool = True,
+                 mix_kwargs: dict | None = None):
         if isinstance(topo, Topology):
             self.K, weights = topo.size, topo.weights
         else:
@@ -229,7 +263,8 @@ class Engine:
         self.algo, self.mix_name, self.dispatch = algo, mix, dispatch
         self.axis_name, self.mesh = axis_name, mesh
         self.mix = make_mix(mix, weights=weights, K=self.K,
-                            self_weight=self_weight, axis_name=axis_name)
+                            self_weight=self_weight, axis_name=axis_name,
+                            **(mix_kwargs or {}))
         alg = ALGORITHMS[algo]
         self._init_body = partial(alg.init, problem, cfg, hp, self.mix)
         self._step_body = partial(alg.step, problem, cfg, hp, self.mix)

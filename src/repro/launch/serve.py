@@ -1,6 +1,10 @@
-"""CLI batched-serving driver (smoke-scale on CPU).
+"""CLI serving driver (smoke-scale on CPU).
+
+Continuous batching (slot scheduler + scan-fused decode) by default; the
+legacy cohort drain stays available for comparison:
 
   python -m repro.launch.serve --arch rwkv6-1.6b --reduced --requests 6
+  python -m repro.launch.serve --arch qwen2.5-3b --reduced --mode cohort
 """
 from __future__ import annotations
 
@@ -23,13 +27,18 @@ def main():
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--capacity", type=int, default=64)
     ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--mode", choices=("continuous", "cohort"),
+                    default="continuous")
+    ap.add_argument("--decode-chunk", type=int, default=8,
+                    help="decode tokens per fused dispatch (continuous mode)")
     args = ap.parse_args()
 
     spec = get(args.arch)
     cfg = spec.reduced() if args.reduced else spec.config
     params = init_params(cfg, jax.random.PRNGKey(0))
     eng = ServeEngine(cfg, params, capacity=args.capacity,
-                      max_batch=args.max_batch)
+                      max_batch=args.max_batch, mode=args.mode,
+                      decode_chunk=args.decode_chunk)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, size=rng.integers(3, 10))
@@ -41,7 +50,10 @@ def main():
     for rid, toks in sorted(results.items()):
         print(f"req {rid}: {toks}")
     print(f"{total_toks} tokens in {dt:.2f}s "
-          f"({total_toks / dt:.1f} tok/s, {args.requests} requests)")
+          f"({total_toks / dt:.1f} tok/s, {args.requests} requests, "
+          f"mode={args.mode})")
+    if eng.stats:
+        print("  " + ", ".join(f"{k}={v}" for k, v in eng.stats.items()))
 
 
 if __name__ == "__main__":

@@ -323,17 +323,27 @@ def _kv_to_cache(cfg, k, v, capacity, window):
 
 
 def prefill(cfg: ModelConfig, params: Params, tokens, capacity: int, *,
-            image_embeds=None, image_pos=None, src_embeds=None):
+            image_embeds=None, image_pos=None, src_embeds=None, length=None):
     """tokens [B, S] -> (last-token logits [B, 1, V], decode cache).
 
     The cache is laid out exactly as :func:`init_cache` so ``decode_step`` can
-    continue from position S."""
+    continue from position S.
+
+    ``length`` (dynamic scalar, ≤ S) marks the prompt as right-padded: logits
+    are taken at position ``length - 1`` and the cache resumes from position
+    ``length``. Only sound for causal attention-path families with no sliding
+    window and dense MLPs — pad positions are causally masked so valid
+    outputs are unchanged, and the pad slots of the KV cache are overwritten
+    by decode before any step can attend to them. Recurrent families
+    (ssm/hybrid) fold pad tokens into their state, and MoE expert capacity
+    scales with the (padded) token count so routing drops change — the
+    serving layer never buckets either."""
     B, S = tokens.shape
     x = embed(cfg, params["embed"], tokens)
     if cfg.family == "vlm" and image_embeds is not None:
         x = _merge_image_embeds(x, image_embeds, image_pos)
     positions = jnp.arange(S)
-    idx = jnp.asarray(S, jnp.int32)
+    idx = jnp.asarray(S if length is None else length, jnp.int32)
     window = cfg.window
 
     if cfg.family in ("dense", "vlm", "moe"):
@@ -429,7 +439,11 @@ def prefill(cfg: ModelConfig, params: Params, tokens, capacity: int, *,
     else:
         raise ValueError(cfg.family)
 
-    x = apply_norm(cfg, params["final_norm"], x[:, -1:])
+    if length is None:
+        x_last = x[:, -1:]
+    else:
+        x_last = jax.lax.dynamic_slice_in_dim(x, idx - 1, 1, axis=1)
+    x = apply_norm(cfg, params["final_norm"], x_last)
     return unembed(cfg, params["embed"], x), cache
 
 
@@ -495,6 +509,38 @@ def init_cache(cfg: ModelConfig, batch: int, capacity: int,
             jnp.arange(L))
         return {"kv": kv, "cross": cross, "idx": jnp.zeros((), jnp.int32)}
     raise ValueError(cfg.family)
+
+
+def cache_batch_axes(cfg: ModelConfig, capacity: int, *, params=None,
+                     src_len: int | None = None) -> Params:
+    """Pytree (same structure as :func:`init_cache`'s output) giving the
+    batch-axis index of every cache leaf, with ``-1`` for batch-invariant
+    leaves (the scalar ``idx``).
+
+    Layer-stacked leaves carry batch on axis 1 ([L, B, ...]), hybrid ``rem``
+    leaves on axis 0 — rather than hardcode that per family, abstract-eval
+    ``init_cache`` at two batch sizes and diff the leaf shapes. The serving
+    layer (``repro.serve.batch``) uses this to insert/gather single-request
+    caches into decode slots of a batched cache."""
+    def build(batch):
+        def f(p, src):
+            return init_cache(cfg, batch, capacity, src_embeds=src, params=p)
+        src = None
+        if cfg.family == "audio":
+            src = jax.ShapeDtypeStruct(
+                (batch, src_len or cfg.src_len, cfg.d_model), cfg.dtype)
+        return jax.eval_shape(f, params, src)
+
+    s1, s2 = build(1), build(2)
+
+    def axis(a, b):
+        diff = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+        if not diff:
+            return -1
+        assert len(diff) == 1, (a.shape, b.shape)
+        return diff[0]
+
+    return jax.tree.map(axis, s1, s2)
 
 
 def decode_step(cfg: ModelConfig, params: Params, tokens, cache):

@@ -1,0 +1,81 @@
+"""Slotted KV-cache operations for continuous batching.
+
+The continuous-batching engine keeps ONE batched decode cache whose batch
+dimension is ``max_batch`` *slots*. Each slot holds an independent request at
+its own absolute position, so the scalar ``cache['idx']`` of the single-stream
+layout becomes a per-slot ``[B]`` vector here ("slot layout"). The ops:
+
+* :func:`init_slot_cache` — empty slot-layout cache for ``max_batch`` slots;
+* :func:`write_slot`      — insert a freshly prefilled single-request cache
+  into slot *i* (mid-decode admission);
+* :func:`gather_slot`     — extract slot *i* back to a single-request cache
+  (debug / equivalence testing).
+
+Batch axes differ per leaf (layer-stacked leaves are [L, B, ...], hybrid
+``rem`` leaves [B, ...]); :func:`repro.models.cache_batch_axes` locates them
+so these ops stay family-agnostic.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import cache_batch_axes, init_cache
+from repro.models.config import ModelConfig
+
+
+def slot_axes(cfg: ModelConfig, capacity: int, *, params=None,
+              src_len: int | None = None):
+    """Batch-axis pytree for the *slot layout*: like
+    :func:`repro.models.cache_batch_axes` but with the per-slot ``idx``
+    vector on axis 0 instead of the batch-invariant sentinel."""
+    axes = cache_batch_axes(cfg, capacity, params=params, src_len=src_len)
+    return jax.tree.map(lambda a: 0 if a < 0 else a, axes)
+
+
+def init_slot_cache(cfg: ModelConfig, max_batch: int, capacity: int, *,
+                    params=None, src_embeds=None):
+    """Empty slot-layout cache: ``init_cache`` for ``max_batch`` streams with
+    ``idx`` widened to a per-slot [B] vector."""
+    cache = dict(init_cache(cfg, max_batch, capacity, src_embeds=src_embeds,
+                            params=params))
+    cache["idx"] = jnp.zeros((max_batch,), jnp.int32)
+    return cache
+
+
+def slotify(request_cache):
+    """Single-request prefill cache (scalar ``idx``) -> slot layout ([1])."""
+    cache = dict(request_cache)
+    cache["idx"] = jnp.reshape(cache["idx"], (1,))
+    return cache
+
+
+def unslotify(request_cache):
+    """Slot layout ([1] ``idx``) -> single-request cache (scalar ``idx``)."""
+    cache = dict(request_cache)
+    cache["idx"] = jnp.reshape(cache["idx"], ())
+    return cache
+
+
+def write_slot(slot_cache, request_cache, i, axes):
+    """Insert a batch-1 prefilled cache into slot ``i`` of the batched cache.
+
+    ``i`` may be a python int or a traced int32 scalar (pass it as an array
+    argument under jit so one compile covers every slot)."""
+    req = slotify(request_cache)
+
+    def ins(big, small, ax):
+        start = [0] * big.ndim
+        start[ax] = i
+        return jax.lax.dynamic_update_slice(
+            big, small.astype(big.dtype), tuple(start))
+
+    return jax.tree.map(ins, slot_cache, req, axes)
+
+
+def gather_slot(slot_cache, i, axes):
+    """Extract slot ``i`` as a single-request cache (scalar ``idx``)."""
+    def take(big, ax):
+        return jax.lax.dynamic_slice_in_dim(big, i, 1, axis=ax)
+
+    return unslotify(jax.tree.map(take, slot_cache, axes))

@@ -1,50 +1,185 @@
-"""Batched serving engine: request queue + prefill/decode scheduling.
+"""Serving engine: slot-based continuous batching over a scan-fused decode.
 
-A deliberately small continuous-batching loop: requests are prefilled in
-padded batches, then decoded together until EOS/max-tokens. Greedy sampling.
-Single-process (the dry-run proves the sharded lowering; this engine drives
-smoke-scale CPU serving and the serving example).
+Two modes behind the same ``submit``/``run`` API:
+
+* ``mode="continuous"`` (default) — the tentpole path. A
+  :class:`~repro.serve.scheduler.SlotScheduler` owns ``max_batch`` decode
+  slots; each queued request is prefilled *individually* (exact prompt
+  length, batch 1) and its cache written into a free slot mid-decode
+  (:func:`repro.serve.batch.write_slot`). Decode runs ``decode_chunk``
+  tokens per device dispatch (:func:`repro.serve.steps.make_fused_decode`)
+  with in-scan EOS/budget masking, so a long request never holds a cohort
+  hostage and finished slots are refilled at the next chunk boundary.
+  Per-request streams are bitwise identical to serial one-request-at-a-time
+  greedy decode (tests/test_scheduler.py).
+
+* ``mode="cohort"`` — the legacy fixed-cohort drain (left-padded batch
+  prefill, one jit call per token), kept as the baseline that
+  ``benchmarks/serve_bench.py`` measures continuous batching against.
+
+Single-process greedy sampling; the dry-run proves the sharded lowering.
 """
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable
+import time
+from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import init_cache
 from repro.models.config import ModelConfig
-from repro.serve.steps import make_decode_step, make_prefill_step
-
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: np.ndarray                # [S] token ids
-    max_new_tokens: int = 16
-    output: list[int] = dataclasses.field(default_factory=list)
-    done: bool = False
+from repro.serve.batch import init_slot_cache, slot_axes, write_slot
+from repro.serve.scheduler import Request, SlotScheduler
+from repro.serve.steps import (make_decode_step, make_fused_decode,
+                               make_prefill_step)
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, capacity: int = 256,
-                 max_batch: int = 8, eos_id: int | None = None):
+                 max_batch: int = 8, eos_id: int | None = None,
+                 mode: str = "continuous", decode_chunk: int = 8,
+                 prefill_bucket: bool = False):
+        if mode not in ("continuous", "cohort"):
+            raise ValueError(f"mode must be continuous|cohort, got {mode!r}")
         self.cfg, self.params = cfg, params
         self.capacity, self.max_batch = capacity, max_batch
-        self.eos_id = eos_id
-        self.queue: list[Request] = []
+        self.eos_id, self.mode, self.decode_chunk = eos_id, mode, decode_chunk
+        # pad admission prefills to power-of-two lengths so a mixed-length
+        # workload compiles O(log S) prefill programs instead of one per
+        # distinct prompt length. Right-padding is causally masked, so it is
+        # numerically exact up to gemm reduction order (~1e-6 on the last
+        # logits; NOT bitwise — the bitwise serial-equivalence contract is
+        # tested with exact-length prefill). Recurrent state (ssm/hybrid) and
+        # ring caches (sliding window) absorb pad tokens, and MoE expert
+        # capacity C ∝ token count means padding changes which valid tokens
+        # routing drops — so bucketing only ever applies to dense-MLP
+        # full-attention families.
+        self._bucket = (prefill_bucket and cfg.window is None
+                        and cfg.family in ("dense", "vlm", "audio"))
+        self.scheduler = SlotScheduler(max_batch)
         self._prefill = jax.jit(make_prefill_step(cfg, capacity))
         self._decode = jax.jit(make_decode_step(cfg))
+        if mode == "continuous":
+            axes = slot_axes(cfg, capacity, params=params)
+            # donation is a no-op (and warns) on CPU
+            donate = (1, 2, 3, 4) if jax.default_backend() != "cpu" else ()
+            self._fused_decode = jax.jit(
+                make_fused_decode(cfg, axes, decode_chunk, eos_id),
+                donate_argnums=donate)
+            self._write_slot = jax.jit(partial(write_slot, axes=axes),
+                                       donate_argnums=donate and (0,))
         self._next_rid = 0
+        self.stats: dict = {}
+        self.completed: dict[int, Request] = {}
+
+    # -- request intake ------------------------------------------------------
 
     def submit(self, prompt, max_new_tokens: int = 16) -> int:
         rid = self._next_rid
         self._next_rid += 1
-        self.queue.append(Request(rid, np.asarray(prompt, np.int32),
-                                  max_new_tokens))
+        req = Request(rid, np.asarray(prompt, np.int32), max_new_tokens,
+                      submit_s=time.perf_counter())
+        self.scheduler.submit(req)
         return rid
+
+    # -- shared helpers ------------------------------------------------------
+
+    def _prefill_inputs(self, tokens: jnp.ndarray,
+                        valid_len: int | None = None) -> dict:
+        """Family extras (zero-stub modalities) for a [B, S] token batch.
+
+        valid_len: true prompt length when ``tokens`` is right-padded to a
+        bucket, so modality extras never land on pad positions."""
+        B, S = tokens.shape
+        batch = {"tokens": tokens}
+        if self.cfg.family == "audio":
+            batch["src_embeds"] = jnp.zeros(
+                (B, self.cfg.src_len, self.cfg.d_model), self.cfg.dtype)
+        if self.cfg.family == "vlm":
+            n = min(self.cfg.n_img_tokens, valid_len or S)
+            batch["image_embeds"] = jnp.zeros(
+                (B, n, self.cfg.d_model), self.cfg.dtype)
+            batch["image_pos"] = jnp.tile(
+                jnp.arange(n, dtype=jnp.int32)[None], (B, 1))
+        return batch
+
+    def _admission_batch(self, req: Request) -> dict:
+        """Prefill inputs for one admitted request: exact-length, or padded
+        to a power-of-two bucket when ``prefill_bucket`` is on."""
+        L = len(req.prompt)
+        toks = req.prompt
+        length = None
+        if self._bucket:
+            pad_to = min(max(8, 1 << max(L - 1, 1).bit_length()),
+                         self.capacity)
+            if L < pad_to:
+                toks = np.zeros(pad_to, np.int32)
+                toks[:L] = req.prompt
+                length = L
+        batch = self._prefill_inputs(jnp.asarray(toks[None]), valid_len=L)
+        if length is not None:
+            batch["length"] = jnp.asarray(length, jnp.int32)
+        return batch
+
+    # -- continuous batching -------------------------------------------------
+
+    def _run_continuous(self) -> dict[int, list[int]]:
+        sched, eos = self.scheduler, self.eos_id
+        B = self.max_batch
+        src = None
+        if self.cfg.family == "audio":
+            src = jnp.zeros((B, self.cfg.src_len, self.cfg.d_model),
+                            self.cfg.dtype)
+        cache = init_slot_cache(self.cfg, B, self.capacity,
+                                params=self.params, src_embeds=src)
+        tok = np.zeros((B,), np.int32)
+        live = np.zeros((B,), bool)
+        remaining = np.zeros((B,), np.int32)
+        results: dict[int, list[int]] = {}
+        stats = {"prefills": 0, "decode_dispatches": 0, "decode_steps": 0,
+                 "emitted_tokens": 0}
+
+        def finish(i: int) -> None:
+            req = sched.release(i)
+            req.finish_s = time.perf_counter()
+            live[i] = False
+            remaining[i] = 0
+            results[req.rid] = req.output
+            self.completed[req.rid] = req
+
+        while sched.has_work():
+            # admission: prefill queued requests into free slots, mid-decode
+            for i, req in sched.admit():
+                batch = self._admission_batch(req)
+                logits, req_cache = self._prefill(self.params, batch)
+                stats["prefills"] += 1
+                stats["emitted_tokens"] += 1  # the prefill-produced token
+                first = int(jnp.argmax(logits[0, -1]))
+                req.first_token_s = time.perf_counter()
+                if req.add_token(first, eos):
+                    finish(i)   # prefill token was EOS or budget == 1
+                    continue
+                cache = self._write_slot(cache, req_cache,
+                                         jnp.asarray(i, jnp.int32))
+                tok[i], live[i], remaining[i] = first, True, req.remaining
+            if not live.any():
+                continue  # queue may still hold work; otherwise loop exits
+            out = self._fused_decode(
+                self.params, jnp.asarray(tok), cache,
+                jnp.asarray(live), jnp.asarray(remaining))
+            tok_d, cache, live_d, remaining_d, tokens, emitted = out
+            tok, live, remaining = (np.array(tok_d), np.array(live_d),
+                                    np.array(remaining_d))
+            stats["decode_dispatches"] += 1
+            stats["decode_steps"] += self.decode_chunk
+            stats["emitted_tokens"] += int(np.asarray(emitted).sum())
+            for i in sched.record_decode(tokens, emitted, eos):
+                finish(i)
+        self.stats = stats
+        return results
+
+    # -- cohort drain (legacy baseline) --------------------------------------
 
     def _pad_batch(self, reqs: list[Request]):
         S = max(len(r.prompt) for r in reqs)
@@ -53,41 +188,48 @@ class ServeEngine:
             toks[i, S - len(r.prompt):] = r.prompt  # left-pad
         return jnp.asarray(toks)
 
-    def run(self) -> dict[int, list[int]]:
-        """Drain the queue; returns {rid: generated tokens}."""
+    def _run_cohort(self) -> dict[int, list[int]]:
         results: dict[int, list[int]] = {}
-        while self.queue:
-            reqs = self.queue[:self.max_batch]
-            self.queue = self.queue[self.max_batch:]
-            batch = {"tokens": self._pad_batch(reqs)}
-            if self.cfg.family == "audio":
-                batch["src_embeds"] = jnp.zeros(
-                    (len(reqs), self.cfg.src_len, self.cfg.d_model),
-                    self.cfg.dtype)
-            if self.cfg.family == "vlm":
-                n = min(self.cfg.n_img_tokens, batch["tokens"].shape[1])
-                batch["image_embeds"] = jnp.zeros(
-                    (len(reqs), n, self.cfg.d_model), self.cfg.dtype)
-                batch["image_pos"] = jnp.tile(
-                    jnp.arange(n, dtype=jnp.int32)[None], (len(reqs), 1))
+        sched = self.scheduler
+        stats = {"prefills": 0, "decode_dispatches": 0, "decode_steps": 0,
+                 "emitted_tokens": 0}
+        while sched.queue:
+            reqs = [sched.queue.popleft()
+                    for _ in range(min(self.max_batch, len(sched.queue)))]
+            sched.n_admitted += len(reqs)  # cohorts bypass the slot table
+            batch = self._prefill_inputs(self._pad_batch(reqs))
             logits, cache = self._prefill(self.params, batch)
+            stats["prefills"] += 1
             tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)[:, None]
+            now = time.perf_counter()
             for r, t in zip(reqs, np.asarray(tok[:, 0])):
-                r.output.append(int(t))
-                if self.eos_id is not None and int(t) == self.eos_id:
-                    r.done = True  # prefill-produced token can already be EOS
+                r.first_token_s = now
+                r.add_token(t, self.eos_id)
+                stats["emitted_tokens"] += 1
             steps = max(r.max_new_tokens for r in reqs) - 1
             for _ in range(max(steps, 0)):
-                if all(r.done or len(r.output) >= r.max_new_tokens
-                       for r in reqs):
+                if all(r.done for r in reqs):
                     break  # every request finished — stop burning decode steps
                 tok, _, cache = self._decode(self.params, tok, cache)
+                stats["decode_dispatches"] += 1
+                stats["decode_steps"] += 1
                 for i, r in enumerate(reqs):
-                    if not r.done and len(r.output) < r.max_new_tokens:
-                        t = int(np.asarray(tok)[i, 0])
-                        r.output.append(t)
-                        if self.eos_id is not None and t == self.eos_id:
-                            r.done = True
+                    if not r.done:
+                        r.add_token(int(np.asarray(tok)[i, 0]), self.eos_id)
+                        stats["emitted_tokens"] += 1
+            now = time.perf_counter()
             for r in reqs:
+                r.finish_s = now
                 results[r.rid] = r.output
+                self.completed[r.rid] = r
+            sched.n_finished += len(reqs)
+        self.stats = stats
         return results
+
+    # -- entry point ---------------------------------------------------------
+
+    def run(self) -> dict[int, list[int]]:
+        """Drain the queue; returns {rid: generated tokens}."""
+        if self.mode == "cohort":
+            return self._run_cohort()
+        return self._run_continuous()

@@ -1,0 +1,132 @@
+"""Slot scheduler for continuous batching (host-side bookkeeping, no JAX).
+
+The device side (``repro.serve.steps`` / ``repro.serve.batch``) sees a fixed
+``max_batch``-wide decode program; this module decides *which request lives in
+which slot when*:
+
+* an **admission queue** (FIFO) of submitted requests;
+* ``max_batch`` **slots**, each free or owning one in-flight request;
+* per-request accounting — generated tokens, EOS, remaining budget — via
+  :meth:`Request.add_token`, the single host-side mirror of the in-scan
+  masking rule (a token is recorded iff the slot was still live; EOS or an
+  exhausted ``max_new_tokens`` budget finishes the request).
+
+The scheduler never touches device state. The engine drives it:
+``admit()`` -> prefill each admission into its free slot -> fused decode
+chunk -> ``record_decode()`` with the emitted token grid -> repeat until
+``has_work()`` is false. Requests can therefore be admitted *mid-decode* the
+moment any slot frees up, which is the whole point of continuous batching.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                # [S] token ids
+    max_new_tokens: int = 16
+    output: list[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    # wall-clock marks filled in by the engine (benchmark latency accounting)
+    submit_s: float = 0.0
+    first_token_s: float = 0.0
+    finish_s: float = 0.0
+
+    @property
+    def remaining(self) -> int:
+        return self.max_new_tokens - len(self.output)
+
+    def add_token(self, tok: int, eos_id: int | None) -> bool:
+        """Record one generated token; returns True when the request is done.
+
+        Mirrors the device-side in-scan masking rule exactly: the token is
+        appended only while the request is live, EOS (when configured) is
+        appended *then* finishes it, and the ``max_new_tokens`` budget
+        finishes it after the last appended token."""
+        if self.done:
+            return True
+        self.output.append(int(tok))
+        if eos_id is not None and int(tok) == eos_id:
+            self.done = True
+        if self.remaining <= 0:
+            self.done = True
+        return self.done
+
+
+class SlotScheduler:
+    """Fixed-width slot table + FIFO admission queue."""
+
+    def __init__(self, max_batch: int):
+        assert max_batch >= 1
+        self.max_batch = max_batch
+        self.slots: list[Request | None] = [None] * max_batch
+        self.queue: deque[Request] = deque()
+        self.n_admitted = 0
+        self.n_finished = 0
+
+    # -- queue ---------------------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def has_work(self) -> bool:
+        return bool(self.queue) or any(r is not None for r in self.slots)
+
+    # -- slots ---------------------------------------------------------------
+
+    def free_slots(self) -> list[int]:
+        return [i for i, r in enumerate(self.slots) if r is None]
+
+    def occupied(self) -> list[tuple[int, Request]]:
+        return [(i, r) for i, r in enumerate(self.slots) if r is not None]
+
+    def admit(self) -> list[tuple[int, Request]]:
+        """Pop queued requests into free slots (FIFO x lowest slot first).
+
+        Returns the (slot, request) pairs admitted this round; the caller
+        prefills each request and writes its cache into the slot, then calls
+        :meth:`release` immediately if the prefill token already finished it
+        (prefill-EOS or ``max_new_tokens == 1``)."""
+        admitted = []
+        for i in self.free_slots():
+            if not self.queue:
+                break
+            req = self.queue.popleft()
+            self.slots[i] = req
+            self.n_admitted += 1
+            admitted.append((i, req))
+        return admitted
+
+    def release(self, i: int) -> Request:
+        req = self.slots[i]
+        assert req is not None, f"slot {i} already free"
+        self.slots[i] = None
+        self.n_finished += 1
+        return req
+
+    # -- decode accounting ---------------------------------------------------
+
+    def record_decode(self, tokens, emitted, eos_id: int | None) -> list[int]:
+        """Fold one fused decode chunk's token grid into the slot requests.
+
+        tokens/emitted: [chunk, max_batch] arrays from the fused decode (the
+        per-step next token and whether the slot was live when it was
+        produced). Returns the slots whose request finished this chunk; the
+        caller releases them (and collects their outputs)."""
+        tokens = np.asarray(tokens)
+        emitted = np.asarray(emitted)
+        finished = []
+        for i, req in self.occupied():
+            for s in range(tokens.shape[0]):
+                if not emitted[s, i]:
+                    continue
+                if req.add_token(tokens[s, i], eos_id):
+                    break
+            if req.done:
+                finished.append(i)
+        return finished

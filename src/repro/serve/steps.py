@@ -1,4 +1,18 @@
-"""Serving step functions: batched prefill and single-token decode."""
+"""Serving step functions: batched prefill, single-token decode, and the
+scan-fused slot decode used by continuous batching.
+
+The slot decode mirrors ``core/engine.py``'s fused-dispatch pattern: one
+device program per ``decode_chunk`` tokens (``jax.lax.scan`` over the decode
+step, donated carry buffers), with EOS/budget masking *inside* the scan so
+finished slots stop emitting without a host round-trip per token.
+
+Each slot is an independent request at its own absolute position, so the slot
+decode is ``decode_step`` vmapped over the slot axis — per-slot scalar
+``idx``, per-slot KV writes, and (for MoE) per-slot routing, which makes a
+slot's token stream bitwise independent of whatever its neighbors hold
+(regression-tested against serial one-request-at-a-time decode in
+tests/test_scheduler.py).
+"""
 from __future__ import annotations
 
 import jax
@@ -14,7 +28,8 @@ def make_prefill_step(cfg: ModelConfig, capacity: int):
             cfg, params, batch["tokens"], capacity,
             image_embeds=batch.get("image_embeds"),
             image_pos=batch.get("image_pos"),
-            src_embeds=batch.get("src_embeds"))
+            src_embeds=batch.get("src_embeds"),
+            length=batch.get("length"))
         return logits, cache
     return step
 
@@ -25,6 +40,76 @@ def make_decode_step(cfg: ModelConfig):
         next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
         return next_tok[:, None], logits, cache
     return step
+
+
+# ---------------------------------------------------------------------------
+# Continuous batching: per-slot decode + scan-fused chunk
+# ---------------------------------------------------------------------------
+
+def make_slot_decode_step(cfg: ModelConfig, axes):
+    """Greedy one-token decode over all slots of a slot-layout cache.
+
+    axes: the :func:`repro.serve.batch.slot_axes` pytree. Returns a function
+    ``(params, tok [B], cache) -> (next_tok [B], new cache)`` where each slot
+    decodes at its own ``cache['idx'][slot]`` position.
+    """
+    leaf_axes = {k: v for k, v in axes.items() if k != "idx"}
+
+    def one(params, tok, cache):
+        # vmap has stripped the slot axis: idx is a scalar, other leaves lost
+        # their batch dim. Re-insert batch=1 where decode_step expects it.
+        idx = cache["idx"]
+        rest = {k: v for k, v in cache.items() if k != "idx"}
+        rest = jax.tree.map(jnp.expand_dims, rest, leaf_axes)
+        logits, new = decode_step(cfg, params, tok[None, None],
+                                  {**rest, "idx": idx})
+        next_tok = jnp.argmax(logits[0, -1], axis=-1).astype(jnp.int32)
+        new = dict(new)
+        new_idx = new.pop("idx")
+        new = jax.tree.map(lambda a, ax: jnp.squeeze(a, ax), new, leaf_axes)
+        return next_tok, {**new, "idx": new_idx}
+
+    return jax.vmap(one, in_axes=(None, 0, axes), out_axes=(0, axes))
+
+
+def make_fused_decode(cfg: ModelConfig, axes, decode_chunk: int,
+                      eos_id: int | None):
+    """Scan-fused continuous-batching decode: ``decode_chunk`` greedy tokens
+    for every live slot in ONE device program.
+
+    Carry: (tok [B], cache, live [B] bool, remaining [B] int32). A slot is
+    ``live`` while it is occupied, has token budget left, and has not emitted
+    EOS. Dead slots keep decoding (their compute is masked out of the result,
+    and their cache slot is overwritten wholesale at the next admission) so
+    the program shape never changes.
+
+    Returns ``(tok, cache, live, remaining, tokens [chunk, B],
+    emitted [chunk, B])`` — ``emitted[s, i]`` marks tokens[s, i] as a real
+    generation for slot i (the host folds these into the per-request streams
+    via ``SlotScheduler.record_decode``).
+    """
+    slot_step = make_slot_decode_step(cfg, axes)
+
+    def chunk(params, tok, cache, live, remaining):
+        def body(carry, _):
+            tok, cache, live, remaining = carry
+            next_tok, cache = slot_step(params, tok, cache)
+            emit = live
+            remaining = jnp.where(emit, remaining - 1, remaining)
+            if eos_id is None:
+                hit_eos = jnp.zeros_like(live)
+            else:
+                hit_eos = emit & (next_tok == eos_id)
+            live = live & ~hit_eos & (remaining > 0)
+            tok = jnp.where(emit, next_tok, tok)
+            return (tok, cache, live, remaining), (next_tok, emit)
+
+        carry, (tokens, emitted) = jax.lax.scan(
+            body, (tok, cache, live, remaining), None, length=decode_chunk)
+        tok, cache, live, remaining = carry
+        return tok, cache, live, remaining, tokens, emitted
+
+    return chunk
 
 
 def cache_specs(cfg: ModelConfig, batch: int, capacity: int,

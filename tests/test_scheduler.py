@@ -1,0 +1,235 @@
+"""Continuous-batching correctness: slot scheduler bookkeeping + the bitwise
+serial-equivalence contract of the scan-fused slot decode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.models import decode_step, init_params, prefill
+from repro.serve import ServeEngine
+from repro.serve.batch import (gather_slot, init_slot_cache, slot_axes,
+                               write_slot)
+from repro.serve.scheduler import Request, SlotScheduler
+
+
+# ---------------------------------------------------------------------------
+# Scheduler bookkeeping (host-side, no model)
+# ---------------------------------------------------------------------------
+
+def _req(rid, max_new=4):
+    return Request(rid, np.array([1, 2, 3], np.int32), max_new)
+
+
+def test_admission_is_fifo_into_lowest_slots():
+    s = SlotScheduler(2)
+    for rid in range(4):
+        s.submit(_req(rid))
+    admitted = s.admit()
+    assert [(i, r.rid) for i, r in admitted] == [(0, 0), (1, 1)]
+    assert s.free_slots() == []
+    assert [r.rid for r in s.queue] == [2, 3]
+
+
+def test_released_slot_is_refilled_mid_decode():
+    s = SlotScheduler(2)
+    for rid in range(3):
+        s.submit(_req(rid))
+    s.admit()
+    s.release(0)
+    assert s.free_slots() == [0]
+    admitted = s.admit()
+    assert [(i, r.rid) for i, r in admitted] == [(0, 2)]
+    assert s.n_admitted == 3
+
+
+def test_record_decode_budget_and_eos():
+    s = SlotScheduler(2)
+    a, b = _req(0, max_new=2), _req(1, max_new=8)
+    a.add_token(10, None)  # prefill tokens
+    b.add_token(11, None)
+    s.submit(a), s.submit(b)
+    s.admit()
+    # chunk of 3 steps; slot 0 budget allows 1 more token, slot 1 hits EOS=7
+    tokens = np.array([[5, 6], [5, 7], [5, 5]])
+    emitted = np.array([[True, True], [False, True], [False, False]])
+    finished = s.record_decode(tokens, emitted, eos_id=7)
+    assert finished == [0, 1]
+    assert a.output == [10, 5] and a.done          # budget exhausted
+    assert b.output == [11, 6, 7] and b.done       # EOS appended then done
+    assert not s.queue and s.free_slots() == []    # caller releases
+
+
+def test_has_work_tracks_queue_and_slots():
+    s = SlotScheduler(1)
+    assert not s.has_work()
+    s.submit(_req(0))
+    assert s.has_work()
+    s.admit()
+    assert s.has_work()
+    s.release(0)
+    assert not s.has_work()
+
+
+# ---------------------------------------------------------------------------
+# Slotted cache ops + serial equivalence (model-level)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get("smollm-360m").reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _serial_greedy(cfg, params, prompt, max_new, eos_id=None, capacity=32):
+    """Reference: one-request-at-a-time prefill + decode_step loop."""
+    lg, cache = prefill(cfg, params,
+                        jnp.asarray(np.asarray(prompt, np.int32)[None]),
+                        capacity)
+    tok = int(jnp.argmax(lg[0, -1]))
+    out = [tok]
+    while len(out) < max_new and (eos_id is None or tok != eos_id):
+        lg, cache = decode_step(cfg, params,
+                                jnp.asarray([[tok]], jnp.int32), cache)
+        tok = int(jnp.argmax(lg[0, -1]))
+        out.append(tok)
+    return out
+
+
+def test_write_then_gather_slot_roundtrips(model):
+    cfg, params = model
+    axes = slot_axes(cfg, 16, params=params)
+    slots = init_slot_cache(cfg, 3, 16, params=params)
+    toks = jnp.arange(5, dtype=jnp.int32)[None]
+    _, req_cache = prefill(cfg, params, toks, 16)
+    slots = write_slot(slots, req_cache, 1, axes)
+    back = gather_slot(slots, 1, axes)
+    assert jax.tree.all(jax.tree.map(
+        lambda a, b: jnp.array_equal(a, b.astype(a.dtype)), req_cache, back))
+    # neighboring slots untouched (still zero-initialized)
+    other = gather_slot(slots, 0, axes)
+    assert int(other["idx"]) == 0
+
+
+def test_continuous_matches_serial_bitwise_mid_decode_admission(model):
+    """The acceptance contract: per-request greedy streams under continuous
+    batching (more requests than slots, varied budgets, so slots are
+    admitted mid-decode) are bitwise identical to serial decode."""
+    cfg, params = model
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=rng.integers(3, 10))
+               for _ in range(6)]
+    budgets = [4, 9, 1, 7, 5, 2]
+    eng = ServeEngine(cfg, params, capacity=32, max_batch=2, decode_chunk=3)
+    rids = [eng.submit(p, m) for p, m in zip(prompts, budgets)]
+    results = eng.run()
+    assert eng.stats["prefills"] == 6
+    for rid, prompt, budget in zip(rids, prompts, budgets):
+        assert results[rid] == _serial_greedy(cfg, params, prompt, budget), rid
+        assert len(results[rid]) == budget
+
+
+def test_continuous_matches_serial_with_eos(model):
+    """EOS mid-stream (in-scan masking) reproduces the serial early stop."""
+    cfg, params = model
+    prompt = [5, 9, 2, 7]
+    ref = _serial_greedy(cfg, params, prompt, 8)
+    # first token whose value has not appeared earlier: EOS must cut exactly
+    # there, not at an earlier duplicate
+    k = next(i for i in range(1, len(ref)) if ref[i] not in ref[:i])
+    eos = ref[k]
+    eng = ServeEngine(cfg, params, capacity=32, max_batch=2, decode_chunk=4,
+                      eos_id=eos)
+    rid = eng.submit(prompt, max_new_tokens=8)
+    other = eng.submit([1, 2, 3], max_new_tokens=6)  # keeps the batch busy
+    results = eng.run()
+    assert results[rid] == ref[:k + 1]
+    assert results[rid][-1] == eos
+    assert len(results[other]) <= 6
+
+
+@pytest.mark.parametrize("arch", ["rwkv6-1.6b", "recurrentgemma-2b"])
+def test_continuous_matches_serial_other_families(arch):
+    """The vmapped slot decode must stay serial-equivalent for non-dense
+    cache layouts too: ssm recurrent state and hybrid blocks/rem trees (the
+    default archs of examples/serving.py and launch/serve.py)."""
+    cfg = get(arch).reduced()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [rng.integers(0, cfg.vocab, size=rng.integers(3, 8))
+               for _ in range(3)]
+    eng = ServeEngine(cfg, params, capacity=32, max_batch=2, decode_chunk=2)
+    rids = [eng.submit(p, 4) for p in prompts]
+    results = eng.run()
+    for rid, prompt in zip(rids, prompts):
+        assert results[rid] == _serial_greedy(cfg, params, prompt, 4), rid
+
+
+def test_neighbor_slots_do_not_perturb_streams(model):
+    """A request's tokens are independent of what shares the batch: run the
+    same request alone and alongside different neighbors."""
+    cfg, params = model
+    prompt = np.array([11, 3, 7, 2, 9], np.int32)
+
+    def run_with(neighbors):
+        eng = ServeEngine(cfg, params, capacity=32, max_batch=4,
+                          decode_chunk=2)
+        rid = eng.submit(prompt, max_new_tokens=6)
+        for n in neighbors:
+            eng.submit(n, max_new_tokens=6)
+        return eng.run()[rid]
+
+    alone = run_with([])
+    rng = np.random.default_rng(7)
+    crowded = run_with([rng.integers(0, cfg.vocab, size=rng.integers(3, 12))
+                        for _ in range(3)])
+    assert alone == crowded == _serial_greedy(cfg, params, prompt, 6)
+
+
+def test_bucketed_prefill_matches_exact_logits(model):
+    """Right-padded (bucketed) prefill: last-valid-token logits and the valid
+    cache slots match exact-length prefill (causal masking hides the pads;
+    ~1e-6 gemm reduction-order noise is the only difference)."""
+    cfg, params = model
+    rng = np.random.default_rng(1)
+    for L in (3, 7, 13, 21):
+        p = rng.integers(0, cfg.vocab, size=L).astype(np.int32)
+        lg_e, c_e = prefill(cfg, params, jnp.asarray(p[None]), 32)
+        pad = np.zeros(32, np.int32)
+        pad[:L] = p
+        lg_b, c_b = prefill(cfg, params, jnp.asarray(pad[None]), 32,
+                            length=jnp.asarray(L, jnp.int32))
+        np.testing.assert_allclose(np.asarray(lg_e, np.float32),
+                                   np.asarray(lg_b, np.float32),
+                                   atol=2e-4, rtol=0)
+        assert int(c_b["idx"]) == L
+        assert jnp.allclose(c_e["kv"]["k"][:, :, :L].astype(jnp.float32),
+                            c_b["kv"]["k"][:, :, :L].astype(jnp.float32),
+                            atol=2e-4)
+
+
+def test_bucket_refused_for_pad_sensitive_families():
+    """MoE capacity routing and recurrent/windowed state absorb pad tokens,
+    so prefill_bucket must silently fall back to exact-length prefill."""
+    for arch in ("phi3.5-moe-42b-a6.6b", "rwkv6-1.6b", "recurrentgemma-2b"):
+        cfg = get(arch).reduced()
+        params = init_params(cfg, jax.random.PRNGKey(0))
+        eng = ServeEngine(cfg, params, capacity=16, max_batch=1,
+                          prefill_bucket=True)
+        assert not eng._bucket, arch
+
+
+def test_bucketed_engine_streams_match_serial(model):
+    """prefill_bucket=True trades bitwise prefill logits for O(log S) compiled
+    shapes; greedy argmax still reproduces the serial streams here."""
+    cfg, params = model
+    rng = np.random.default_rng(2)
+    prompts = [rng.integers(0, cfg.vocab, size=rng.integers(3, 14))
+               for _ in range(4)]
+    eng = ServeEngine(cfg, params, capacity=32, max_batch=2, decode_chunk=3,
+                      prefill_bucket=True)
+    rids = [eng.submit(p, 5) for p in prompts]
+    results = eng.run()
+    for rid, prompt in zip(rids, prompts):
+        assert results[rid] == _serial_greedy(cfg, params, prompt, 5), rid

@@ -1,4 +1,11 @@
-"""ServeEngine EOS handling: prefill-produced EOS + early decode exit."""
+"""ServeEngine EOS handling, in both scheduling modes.
+
+* prefill-produced EOS must finish a request before it ever occupies a
+  decode dispatch (cohort: zero decode steps; continuous: zero fused chunks);
+* once every in-flight request is done, decode must stop burning device
+  programs (cohort: early loop exit; continuous: in-scan masking means the
+  chunk that observes the last EOS is the final dispatch).
+"""
 import jax
 import pytest
 
@@ -23,35 +30,59 @@ def _greedy_tokens(cfg, params, n):
     return eng.run()[rid]
 
 
-def _counting_engine(cfg, params, eos_id):
-    eng = ServeEngine(cfg, params, capacity=32, max_batch=2, eos_id=eos_id)
+def _counting_engine(cfg, params, eos_id, mode):
+    """Engine whose decode dispatches are counted (the device-program count,
+    whatever the mode's dispatch granularity)."""
+    eng = ServeEngine(cfg, params, capacity=32, max_batch=2, eos_id=eos_id,
+                      mode=mode, decode_chunk=4)
     calls = {"n": 0}
-    orig = eng._decode
+    attr = "_decode" if mode == "cohort" else "_fused_decode"
+    orig = getattr(eng, attr)
 
     def counted(*args):
         calls["n"] += 1
         return orig(*args)
 
-    eng._decode = counted
+    setattr(eng, attr, counted)
     return eng, calls
 
 
-def test_prefill_token_eos_is_checked(model):
+@pytest.mark.parametrize("mode", ["cohort", "continuous"])
+def test_prefill_token_eos_is_checked(model, mode):
     """Regression: the prefill-produced first token was never EOS-checked."""
     cfg, params = model
     t0 = _greedy_tokens(cfg, params, 1)[0]
-    eng, calls = _counting_engine(cfg, params, eos_id=t0)
+    eng, calls = _counting_engine(cfg, params, eos_id=t0, mode=mode)
     rid = eng.submit(PROMPT, max_new_tokens=8)
     assert eng.run()[rid] == [t0]
-    assert calls["n"] == 0  # no decode step should run at all
+    assert calls["n"] == 0  # no decode dispatch should run at all
 
 
-def test_decode_loop_exits_when_all_done(model):
+@pytest.mark.parametrize("mode", ["cohort", "continuous"])
+def test_decode_stops_when_all_done(model, mode):
     """Regression: done requests kept consuming decode iterations."""
     cfg, params = model
     t0, t1 = _greedy_tokens(cfg, params, 2)
     assert t0 != t1, "greedy stream degenerate; pick a different prompt"
-    eng, calls = _counting_engine(cfg, params, eos_id=t1)
+    eng, calls = _counting_engine(cfg, params, eos_id=t1, mode=mode)
     rid = eng.submit(PROMPT, max_new_tokens=8)
     assert eng.run()[rid] == [t0, t1]
-    assert calls["n"] == 1  # EOS at the first decode step ends the loop
+    # cohort: EOS at the first decode step ends the loop; continuous: the
+    # in-scan mask finishes the slot inside the first fused chunk
+    assert calls["n"] == 1
+
+
+def test_prefill_eos_slot_is_immediately_reusable(model):
+    """A prefill-EOS request must not strand its slot: the next queued
+    request is admitted in the same scheduling round."""
+    cfg, params = model
+    t0 = _greedy_tokens(cfg, params, 1)[0]
+    eng = ServeEngine(cfg, params, capacity=32, max_batch=1, eos_id=t0,
+                      decode_chunk=2)
+    first = eng.submit(PROMPT, max_new_tokens=8)   # finishes at prefill
+    second = eng.submit([1, 2, 3], max_new_tokens=3)
+    results = eng.run()
+    assert results[first] == [t0]
+    assert 1 <= len(results[second]) <= 3
+    assert eng.scheduler.n_admitted == 2
+    assert eng.scheduler.n_finished == 2
