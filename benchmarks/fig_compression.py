@@ -5,7 +5,10 @@ ratios — bytes per round vs final loss.
 Runs through the Engine's registered ``compressed_topk`` mix backend with
 fused dispatch (one scan-fused device program per eval interval), so the
 compressed runs get the same execution substrate as every other run path
-instead of a hand-rolled per-step loop."""
+instead of a hand-rolled per-step loop. Each sub-unit ratio also runs the
+EF21 error-feedback variant (``mix_kwargs={'error_feedback': True}``) —
+the accumulators un-bias the gossip fixed point at aggressive ratios for
+the same communicated bytes."""
 from __future__ import annotations
 
 from benchmarks.common import J, PAPER_HP, build
@@ -17,28 +20,30 @@ from repro.data import make_device_sampler
 def main(steps: int = 40, K: int = 8, dataset: str = "a9a-syn"):
     rows = []
     for ratio in (1.0, 0.25, 0.05):
-        prob, cfg, sampler, topo = build(dataset, K)
-        sample = make_device_sampler(sampler.tr, sampler.va,
-                                     batch=sampler.batch, J=J)
-        eval_batch = sampler.eval_batch()
-        if ratio >= 1.0:
-            mix, mix_kwargs = "dense", None
-        else:
-            mix, mix_kwargs = "compressed_topk", {"ratio": ratio}
-        eng = Engine(prob, cfg, PAPER_HP["mdbo"], topo, algo="mdbo",
-                     mix=mix, dispatch="fused", mix_kwargs=mix_kwargs)
-        res, state = eng.run(sample, eval_batch, steps=steps, seed=0,
-                             eval_every=max(steps // 2, 1),
-                             return_state=True)
-        us = res.wall_time_s / steps * 1e6
-        comm = comm_bytes_per_mix(state.y, ratio, W=topo.weights)
-        rows.append({
-            "name": f"compress/topk{ratio}/K{K}",
-            "us_per_call": round(us, 1),
-            "derived": (f"final_loss={res.upper_loss[-1]:.4f};"
-                        f"y_comm_bytes_per_round={comm};"
-                        f"consensus={res.consensus_x[-1]:.2e}"),
-        })
+        for ef in ((False,) if ratio >= 1.0 else (False, True)):
+            prob, cfg, sampler, topo = build(dataset, K)
+            sample = make_device_sampler(sampler.tr, sampler.va,
+                                         batch=sampler.batch, J=J)
+            eval_batch = sampler.eval_batch()
+            if ratio >= 1.0:
+                mix, mix_kwargs = "dense", None
+            else:
+                mix = "compressed_topk"
+                mix_kwargs = {"ratio": ratio, "error_feedback": ef}
+            eng = Engine(prob, cfg, PAPER_HP["mdbo"], topo, algo="mdbo",
+                         mix=mix, dispatch="fused", mix_kwargs=mix_kwargs)
+            res, state = eng.run(sample, eval_batch, steps=steps, seed=0,
+                                 eval_every=max(steps // 2, 1),
+                                 return_state=True)
+            us = res.wall_time_s / steps * 1e6
+            comm = comm_bytes_per_mix(state.y, ratio, W=topo.weights)
+            rows.append({
+                "name": f"compress/topk{ratio}{'-ef' if ef else ''}/K{K}",
+                "us_per_call": round(us, 1),
+                "derived": (f"final_loss={res.upper_loss[-1]:.4f};"
+                            f"y_comm_bytes_per_round={comm};"
+                            f"consensus={res.consensus_x[-1]:.2e}"),
+            })
     return rows
 
 

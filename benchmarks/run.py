@@ -2,9 +2,14 @@
 microbenches. Prints ``name,us_per_call,steps_per_sec,derived`` CSV.
 
 All figure reproductions run through the scan-fused engine (core.engine);
-``engine_bench`` additionally reports the fused vs per-step dispatch ratio.
+``engine_bench`` and ``trainer_bench`` additionally report the fused vs
+per-step dispatch ratio (logreg and Engine-backed LM trainer respectively).
 
-  PYTHONPATH=src python -m benchmarks.run [--quick]
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--all]
+
+``--all`` covers every subsystem, adding the LM-trainer dispatch bench
+(``trainer_bench``) to the default figure + micro set; ``serve_bench`` is
+always part of the default set.
 """
 from __future__ import annotations
 
@@ -16,13 +21,15 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true",
                     help="fewer steps (CI-scale)")
+    ap.add_argument("--all", action="store_true",
+                    help="every registered bench incl. the LM trainer")
     args = ap.parse_args()
     steps = 30 if args.quick else 60
 
     from benchmarks import (engine_bench, fig1_loss_curves, fig2_accuracy,
                             fig3_speedup, fig_compression, fig_noniid,
                             fig_topology, hypergrad_bench, mixing_bench,
-                            roofline_table, serve_bench)
+                            roofline_table, serve_bench, trainer_bench)
 
     rows = []
     rows += fig1_loss_curves.main(steps=steps)
@@ -37,6 +44,10 @@ def main() -> None:
     rows += hypergrad_bench.main()
     rows += roofline_table.main()
     rows += serve_bench.main(n_requests=9 if args.quick else 18)
+    if args.all:
+        rows += trainer_bench.main(steps=48 if args.quick else 96,
+                                   eval_every=12 if args.quick else 24,
+                                   repeats=1 if args.quick else 3)
 
     print("name,us_per_call,steps_per_sec,derived")
     for r in rows:

@@ -2,24 +2,23 @@
 language model: lower level trains the weights, upper level adapts per-layer
 regularization strengths, both over a ring of workers with gradient tracking.
 
-CPU smoke default is a reduced SmolLM; ``--full`` selects the real config
-(requires a TPU pod — the sharded path is proven by the dry-run). Any of the
-10 assigned architectures works via --arch.
+Runs on the Engine substrate with fused dispatch: every eval interval is one
+scan-fused device program, token batches sampled in-scan
+(``data.make_device_lm_sampler``), PRNG streams split by the engine's key
+schedule. CPU smoke default is a reduced SmolLM; ``--full`` selects the real
+config (requires a TPU pod — the sharded path is proven by the dry-run). Any
+of the 10 assigned architectures works via --arch.
 
   PYTHONPATH=src python examples/decentralized_lm_pretrain.py --steps 10
 """
 import argparse
-import time
-from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get
-from repro.core.common import HParams, consensus_error, replicate
-from repro.models import loss_fn
-from repro.train import (TrainerConfig, make_mix, make_step_batch,
-                         make_step_fns)
+from repro.core.common import HParams
+from repro.data import make_device_lm_sampler, make_node_batch
+from repro.train import TrainerConfig, make_trainer_engine
 
 
 def main():
@@ -28,6 +27,7 @@ def main():
     ap.add_argument("--algo", default="mdbo", choices=["mdbo", "vrdbo",
                                                        "gt_sgd"])
     ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--eval-every", type=int, default=5)
     ap.add_argument("--nodes", type=int, default=4)
     ap.add_argument("--batch", type=int, default=2)
     ap.add_argument("--seq", type=int, default=32)
@@ -38,32 +38,25 @@ def main():
     cfg = spec.config if args.full else spec.reduced()
     tc = TrainerConfig(algo=args.algo, J=2, mix="ring",
                        hp=HParams(eta=0.1, beta1=0.05, beta2=0.5))
-    problem, init_fn, step_fn = make_step_fns(cfg, tc)
     K = args.nodes
-    mix = make_mix(tc, K)
+    problem, eng = make_trainer_engine(cfg, tc, K)
+    sampler = make_device_lm_sampler(cfg, tc, K, args.batch, args.seq)
+    eval_batch = make_node_batch(cfg, jax.random.PRNGKey(17), args.batch,
+                                 args.seq)
 
-    key = jax.random.PRNGKey(0)
-    X0 = replicate(problem.init_x(key), K)
-    Y0 = replicate(problem.init_y(key), K)
-    n_params = sum(x.size for x in jax.tree.leaves(Y0)) // K
-    print(f"{cfg.name}: {n_params:,} params/node, K={K} ring, {args.algo}")
+    y_sh = jax.eval_shape(problem.init_y, jax.random.PRNGKey(0))
+    n_params = sum(l.size for l in jax.tree.leaves(y_sh))
+    print(f"{cfg.name}: {n_params:,} params/node, K={K} ring, {args.algo}, "
+          f"fused chunks of {args.eval_every}")
 
-    key, kb = jax.random.split(key)
-    batch = make_step_batch(cfg, tc, kb, K, args.batch, args.seq)
-    state = init_fn(mix, X0, Y0, batch, jax.random.split(kb, K))
-    step = jax.jit(partial(step_fn, mix))
-
-    t0 = time.time()
-    for t in range(1, args.steps + 1):
-        key, kb = jax.random.split(key)
-        batch = make_step_batch(cfg, tc, kb, K, args.batch, args.seq)
-        state = step(state, batch, jax.random.split(kb, K))
-        loss = float(loss_fn(cfg, jax.tree.map(lambda a: a[0], state.y),
-                             jax.tree.map(lambda a: a[0], batch["g"])))
-        print(f"step {t:3d}  train-loss {loss:7.4f}  "
-              f"consensus {float(consensus_error(state.x)):.1e}  "
-              f"x̄_reg {float(jnp.mean(state.x)):+.4f}  "
-              f"({time.time() - t0:5.1f}s)", flush=True)
+    res = eng.run(sampler, eval_batch, steps=args.steps,
+                  eval_every=args.eval_every)
+    for row in res.as_rows():
+        print(f"step {row['step']:3d}  val-loss {row['upper_loss']:7.4f}  "
+              f"train-obj {row['lower_loss']:7.4f}  "
+              f"consensus {row['consensus_x']:.1e}", flush=True)
+    print(f"{args.steps} steps in {res.wall_time_s:.1f}s "
+          f"({args.steps / max(res.wall_time_s, 1e-9):.2f} steps/s)")
 
 
 if __name__ == "__main__":

@@ -61,6 +61,14 @@ def node_mean(tree: Tree) -> Tree:
     return jax.tree.map(lambda a: jnp.mean(a, axis=0), tree)
 
 
-def replicate(tree: Tree, K: int) -> Tree:
-    """Stack K identical copies (the paper's x_0^{(k)} = x_0 initialisation)."""
-    return jax.tree.map(lambda a: jnp.broadcast_to(a[None], (K,) + a.shape), tree)
+def replicate(tree: Tree, K: int, sharding=None) -> Tree:
+    """Stack K identical copies (the paper's x_0^{(k)} = x_0 initialisation).
+
+    ``sharding`` (e.g. a ``NamedSharding`` over the node axis of a mesh)
+    places every stacked leaf at creation time, so mesh runs start node-
+    sharded instead of being resharded at the first jit boundary."""
+    out = jax.tree.map(lambda a: jnp.broadcast_to(a[None], (K,) + a.shape),
+                       tree)
+    if sharding is not None:
+        out = jax.tree.map(lambda a: jax.device_put(a, sharding), out)
+    return out

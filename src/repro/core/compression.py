@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.hypergrad import tree_add, tree_sub
 from repro.core.tracking import MixFn
 
 
@@ -54,8 +55,14 @@ def topk_sparsify(ratio: float) -> Callable:
     return compress
 
 
-def random_sparsify(ratio: float, seed: int = 0) -> Callable:
-    """Keep a random ``ratio`` fraction (unbiased up to 1/ratio scaling)."""
+def random_sparsify(ratio: float, seed: int = 0,
+                    rescale: bool = True) -> Callable:
+    """Keep a random ``ratio`` fraction (unbiased up to 1/ratio scaling).
+
+    ``rescale=False`` drops the 1/ratio factor, giving the *contractive*
+    (biased) variant: ‖v − C(v)‖ ≤ ‖v‖. Error feedback requires it — with
+    the unbiased rescale the EF21 accumulator update h' = h + C(v − h)
+    overshoots kept coordinates by 1/ratio and diverges geometrically."""
     assert 0.0 < ratio <= 1.0
 
     def compress(tree):
@@ -64,7 +71,8 @@ def random_sparsify(ratio: float, seed: int = 0) -> Callable:
                 return a
             key = jax.random.fold_in(jax.random.PRNGKey(seed), _path_seed(path))
             mask = jax.random.bernoulli(key, ratio, a.shape)
-            return (a * mask / ratio).astype(a.dtype)
+            kept = a * mask
+            return (kept / ratio if rescale else kept).astype(a.dtype)
         return jax.tree_util.tree_map_with_path(leaf, tree)
 
     return compress
@@ -85,6 +93,65 @@ def compressed_mix(W, compressor: Callable) -> MixFn:
         return jax.tree.map(leaf, tree, comp)
 
     return mix
+
+
+class ErrorFeedbackMix:
+    """EF21-style stateful compressed gossip (Richtárik et al., 2021).
+
+    Plain ``compressed_mix`` communicates C(A) directly, so the gossip fixed
+    point is biased by the compression error. Error feedback keeps, per gossip
+    call site, a device-resident proxy ``h`` of what the neighbors have
+    reconstructed so far and only compresses the *innovation*:
+
+        c_t = C(A_t − h_{t−1});   h_t = h_{t−1} + c_t
+        mix(A_t) = A_t + (W − I) h_t
+
+    Only ``c_t`` would cross the network. As the iterates converge, the
+    innovation shrinks, ``h → A`` and the mix approaches the exact ``W·A`` —
+    aggressive ratios stop biasing the fixed point.
+
+    The engine threads the per-call-site accumulators through its scan carry
+    via :meth:`bind`; a direct ``__call__`` is the stateless ``h ≡ 0`` special
+    case (identical to plain ``compressed_mix``), used for the t=0 init.
+    """
+
+    stateful = True
+
+    def __init__(self, W, compressor: Callable):
+        Wn = np.asarray(W)
+        self.Wm = jnp.asarray(Wn - np.eye(Wn.shape[0]))
+        self.compressor = compressor
+
+    def apply(self, tree, h):
+        """One EF21 update: (mixed tree, updated accumulator)."""
+        c = self.compressor(tree_sub(tree, h))
+        h_new = tree_add(h, c)
+        mixed = jax.tree.map(
+            lambda a, hh: (a + jnp.tensordot(self.Wm, hh, axes=([1], [0]))
+                           ).astype(a.dtype), tree, h_new)
+        return mixed, h_new
+
+    def __call__(self, tree):
+        h0 = jax.tree.map(jnp.zeros_like, tree)
+        return self.apply(tree, h0)[0]
+
+    def bind(self, states):
+        """Close over per-call-site accumulators for one traced step.
+
+        ``states`` is a sequence of ``h`` trees consumed in trace order (the
+        call order inside an algorithm step is deterministic, so site *i*
+        always corresponds to the same mixed variable). Returns ``(mix, out)``
+        where ``out`` collects the updated accumulators in the same order.
+        """
+        it = iter(states)
+        out: list = []
+
+        def mix(tree):
+            mixed, h_new = self.apply(tree, next(it))
+            out.append(h_new)
+            return mixed
+
+        return mix, out
 
 
 def neighbor_degree(W) -> int:

@@ -22,7 +22,9 @@ from repro.core.hypergrad import HypergradConfig
 from repro.core.problems import BilevelProblem
 from repro.core.topology import Topology
 
-ALGOS = tuple(ALGORITHMS)
+# The paper's algorithms (benchmarks/tests parametrize over these). The
+# engine registry additionally carries the single-level 'gt_sgd' ablation.
+ALGOS = ("mdbo", "vrdbo", "dsbo", "gdsbo")
 
 
 def run(problem: BilevelProblem, cfg: HypergradConfig, hp: HParams,
@@ -40,7 +42,7 @@ def run(problem: BilevelProblem, cfg: HypergradConfig, hp: HParams,
     sample_batch(key) must return {'f','g','h'} with node axis K (and J axis
     on 'h'). eval_batch is a *global* batch (no node axis) for diagnostics.
     """
-    assert algo in ALGOS, algo
+    assert algo in ALGORITHMS, algo
     eng = Engine(problem, cfg, hp, topo, algo=algo, mix=mix_backend,
                  dispatch=dispatch, mesh=mesh)
     return eng.run(sample_batch, eval_batch, steps=steps, seed=seed,

@@ -1,35 +1,48 @@
-"""Scan-fused execution engine for the decentralized bilevel algorithms.
+"""Scan-fused execution engine — the single run substrate of the repo.
 
-The engine is the single run substrate behind :mod:`repro.core.driver`,
-:mod:`repro.core.distributed` and :mod:`repro.train.decentral`:
+Every run path (driver simulator, shard_map distributed, the decentralized LM
+trainer, benchmarks, examples) drives the same :class:`Engine`:
 
 * **Dispatch** — ``fused`` compiles a whole eval interval (``eval_every``
   steps) into ONE device program via :func:`jax.lax.scan`: state buffers are
   donated between chunks and cheap consensus diagnostics are accumulated
   in-scan, so the host touches the device once per interval instead of once
   per step. ``per_step`` keeps the legacy one-jit-call-per-iteration loop
-  (the dispatch-overhead baseline measured in ``benchmarks/engine_bench.py``).
+  (the dispatch-overhead baseline measured in ``benchmarks/engine_bench.py``
+  and ``benchmarks/trainer_bench.py``).
 * **Mix backends** — a registry of the communication primitive ``A ↦ W A``
   selected by name: ``dense`` (einsum with the K×K mixing matrix),
   ``ring_rolled`` (jnp.roll, W-free), ``ring_local`` (shard_map +
   collective_permute; one node per mesh shard), and the compressed-gossip
   operators ``compressed_topk`` / ``compressed_rand`` (A + (W−I)·C(A); pass
-  the keep fraction via ``mix_kwargs={'ratio': ...}``). Callers stop
-  hand-rolling their own mix construction.
+  the keep fraction via ``mix_kwargs={'ratio': ...}`` and opt into EF21
+  error-feedback accumulators with ``mix_kwargs={'error_feedback': True}`` —
+  the engine threads the per-call-site residual state through its scan
+  carry). Callers stop hand-rolling their own mix construction.
+* **Mesh execution** — pass ``mesh`` plus the node-axis name (``data`` for
+  per-node parameter copies, ``pod`` for FSDP-inside-a-node pods, per
+  ``ArchSpec.train_mode``). ``ring_local`` runs the algorithm body under
+  shard_map with the node-stacked state/batches sharded over that axis; any
+  other backend runs under GSPMD with the initial state placed node-sharded
+  (:func:`repro.core.common.replicate` honors the sharding hint), so XLA
+  inserts the collectives.
+* **Samplers** — a first-class :class:`Sampler` protocol. Device-resident
+  samplers (``device_resident = True``; e.g. ``data.make_device_sampler``,
+  ``data.make_device_lm_sampler``) are pure JAX and are sampled *inside* the
+  scan — LM batches with ``{'f','g','h'(K,J)}`` structure and modality extras
+  flow through fused dispatch with zero host round-trips per interval. Host
+  samplers (``device_resident = False`` or the legacy ``host_sampler = True``
+  attribute, e.g. :class:`repro.data.NodeSampler`) are drawn per-step on the
+  host and stacked on a leading time axis the scan consumes. Bare callables
+  are accepted and treated as device-resident.
 * **Key discipline** — every iteration consumes two *independent* subkeys,
   one for the minibatch draw and one for the per-node Neumann truncation
   level J̃, via :func:`key_schedule`. (The seed driver reused a single key
   for both, correlating the batch and J̃ streams.)
 
-Samplers: ``sample_batch(key)`` that is pure JAX is sampled *inside* the
-scan (fully device-resident chunks). Host-side samplers (anything exposing
-``host_sampler = True``, e.g. :class:`repro.data.NodeSampler`) are drawn
-per-step on the host and stacked on a leading time axis the scan consumes —
-same program shape, batch generation stays on the host.
-
-Bitwise contract (tests/test_engine.py): a fused run of T steps is
-bit-identical to T per-step ``step_fn`` calls under the same key schedule,
-for every algorithm and every mix backend.
+Bitwise contract (tests/test_engine.py, tests/test_trainer_engine.py): a
+fused run of T steps is bit-identical to T per-step ``step_fn`` calls under
+the same key schedule, for every algorithm and every mix backend.
 """
 from __future__ import annotations
 
@@ -40,16 +53,18 @@ from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
+from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
 from repro.core import baselines, mdbo, vrdbo
 from repro.core.common import (HParams, consensus_error, node_mean,
                                replicate)
-from repro.core.hypergrad import HypergradConfig
+from repro.core.hypergrad import HypergradConfig, tree_zeros_like
 from repro.core.problems import BilevelProblem
 from repro.core.topology import Topology, ring
-from repro.core.tracking import (MixFn, dense_mix, ring_mix_local,
-                                 ring_mix_rolled)
+from repro.core.tracking import (MixFn, dense_mix, param_update,
+                                 ring_mix_local, ring_mix_rolled,
+                                 track_update)
 
 Tree = Any
 
@@ -64,6 +79,50 @@ def shard_map_compat(fn, mesh, in_specs, out_specs):
     """Version-portable shard_map with replication checking disabled."""
     return _shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                       **_SM_NOCHECK)
+
+
+# ---------------------------------------------------------------------------
+# Sampler protocol
+# ---------------------------------------------------------------------------
+
+class Sampler:
+    """First-class sampler protocol for :meth:`Engine.run`.
+
+    ``sample(key)`` returns a step batch ``{'f','g','h'}`` with node axis K
+    (J axis on 'h'); modality extras ride along as extra dict entries.
+    ``device_resident`` declares whether ``sample`` is pure JAX — traced into
+    the fused scan so a whole eval interval is one device program — or host
+    code, drawn per-step and stacked on a leading time axis.
+
+    Bare callables are also accepted by the engine: device-resident by
+    default, host-side if they carry the legacy ``host_sampler = True``.
+    """
+
+    device_resident: bool = True
+
+    def sample(self, key):
+        raise NotImplementedError
+
+    def __call__(self, key=None):
+        return self.sample(key)
+
+
+class DeviceSampler(Sampler):
+    """Wrap a pure-JAX ``sample(key) -> batch`` function as a Sampler."""
+
+    def __init__(self, fn: Callable):
+        self._fn = fn
+
+    def sample(self, key):
+        return self._fn(key)
+
+
+def is_host_sampler(sample_batch) -> bool:
+    """Host vs device-resident, honoring the legacy ``host_sampler`` attr."""
+    resident = getattr(sample_batch, "device_resident", None)
+    if resident is not None:
+        return not resident
+    return bool(getattr(sample_batch, "host_sampler", False))
 
 
 # ---------------------------------------------------------------------------
@@ -85,11 +144,38 @@ def _dsbo_init(problem, cfg, hp, mix, X0, Y0, batch, keys):
     return baselines.dsbo_init(X0, Y0)
 
 
+def _gt_sgd_grads(problem, X, Y, batch):
+    """Per-node ∇_y of the raw (upper) loss on the training draw ζ0."""
+    return jax.vmap(lambda x, y, b: jax.grad(
+        lambda yy: problem.upper_loss(x, yy, b))(y))(X, Y, batch["g"])
+
+
+def _gt_sgd_init(problem, cfg, hp, mix, X0, Y0, batch, keys):
+    """Single-level gradient-tracking SGD ablation: the upper level is inert
+    (x frozen at X0, its estimator/tracker slots zero — not copies of X0, or
+    diagnostics that read estimator norms report parameter magnitudes)."""
+    dg = _gt_sgd_grads(problem, X0, Y0, batch)
+    y1 = param_update(Y0, dg, hp.eta, hp.beta2, mix)
+    return mdbo.MDBOState(x=X0, y=y1, u=tree_zeros_like(X0), v=dg,
+                          zf=tree_zeros_like(X0), zg=dg)
+
+
+def _gt_sgd_step(problem, cfg, hp, mix, state, batch, keys):
+    dg = _gt_sgd_grads(problem, state.x, state.y, batch)
+    a2 = hp.alpha2 * hp.eta
+    v_new = jax.tree.map(lambda v, d: (1 - a2) * v + a2 * d, state.v, dg)
+    zg_new = track_update(state.zg, v_new, state.v, mix)
+    y_new = param_update(state.y, zg_new, hp.eta, hp.beta2, mix)
+    return mdbo.MDBOState(x=state.x, y=y_new, u=state.u, v=v_new,
+                          zf=state.zf, zg=zg_new)
+
+
 ALGORITHMS: dict[str, Algorithm] = {
     "mdbo": Algorithm(mdbo.init, mdbo.step),
     "vrdbo": Algorithm(vrdbo.init, vrdbo.step),
     "dsbo": Algorithm(_dsbo_init, baselines.dsbo_step),
     "gdsbo": Algorithm(baselines.gdsbo_init, baselines.gdsbo_step),
+    "gt_sgd": Algorithm(_gt_sgd_init, _gt_sgd_step),
 }
 
 
@@ -145,31 +231,44 @@ def _compression_weights(weights, K, self_weight):
 @register_mix_backend("compressed_topk")
 def _compressed_topk_backend(*, weights=None, K: int | None = None,
                              self_weight: float = 1.0 / 3.0,
-                             axis_name: str = "data", ratio: float = 0.25):
+                             axis_name: str = "data", ratio: float = 0.25,
+                             error_feedback: bool = False):
     """Compressed gossip A + (W−I)·topk(A): only the top ``ratio`` fraction
-    of entries (by magnitude, per node/leaf) crosses the network."""
-    from repro.core.compression import compressed_mix, topk_sparsify
+    of entries (by magnitude, per node/leaf) crosses the network.
+    ``error_feedback=True`` wraps the compressor in EF21 accumulators."""
+    from repro.core.compression import (ErrorFeedbackMix, compressed_mix,
+                                        topk_sparsify)
     W = _compression_weights(weights, K, self_weight)
-    return compressed_mix(W, topk_sparsify(ratio))
+    comp = topk_sparsify(ratio)
+    return (ErrorFeedbackMix(W, comp) if error_feedback
+            else compressed_mix(W, comp))
 
 
 @register_mix_backend("compressed_rand")
 def _compressed_rand_backend(*, weights=None, K: int | None = None,
                              self_weight: float = 1.0 / 3.0,
                              axis_name: str = "data", ratio: float = 0.25,
-                             seed: int = 0):
-    """Compressed gossip with the unbiased random sparsifier (keys are a
-    stable digest of the leaf path — reproducible across processes)."""
-    from repro.core.compression import compressed_mix, random_sparsify
+                             seed: int = 0, error_feedback: bool = False):
+    """Compressed gossip with the random sparsifier (keys are a stable
+    digest of the leaf path — reproducible across processes). The plain
+    form uses the unbiased 1/ratio rescale; the EF21 form needs the
+    contractive mask-only variant (the rescale would make the accumulator
+    amplify the innovation by 1/ratio per call and diverge — EF supplies
+    the bias correction itself)."""
+    from repro.core.compression import (ErrorFeedbackMix, compressed_mix,
+                                        random_sparsify)
     W = _compression_weights(weights, K, self_weight)
-    return compressed_mix(W, random_sparsify(ratio, seed=seed))
+    comp = random_sparsify(ratio, seed=seed, rescale=not error_feedback)
+    return (ErrorFeedbackMix(W, comp) if error_feedback
+            else compressed_mix(W, comp))
 
 
 def make_mix(name: str, **kwargs) -> MixFn:
     """Build a mixing operator from the backend registry.
 
     kwargs: weights (dense / compressed_*), K (default-ring fallback),
-    self_weight, axis_name (ring_local), ratio / seed (compressed_*).
+    self_weight, axis_name (ring_local), ratio / seed / error_feedback
+    (compressed_*).
     """
     try:
         builder = MIX_BACKENDS[name]
@@ -229,7 +328,7 @@ class RunResult:
 # ---------------------------------------------------------------------------
 
 class Engine:
-    """Unified run substrate: algorithm × mix backend × dispatch mode.
+    """Unified run substrate: algorithm × mix backend × dispatch × mesh.
 
     Parameters
     ----------
@@ -240,6 +339,11 @@ class Engine:
         ``mesh`` (one node per shard of ``axis_name``).
     dispatch: ``fused`` (lax.scan chunks of ``eval_every`` steps, donated
         state) or ``per_step`` (legacy one-jit-call-per-step loop).
+    mesh / axis_name: mesh execution. ``axis_name`` is the node axis of the
+        mesh — ``data`` for per-node parameter copies (dp), ``pod`` for
+        FSDP-inside-a-node pods (fsdp_gt). ``ring_local`` shard_maps the
+        algorithm body over that axis; other backends run under GSPMD with
+        the state placed node-sharded.
     """
 
     def __init__(self, problem: BilevelProblem, cfg: HypergradConfig,
@@ -265,12 +369,52 @@ class Engine:
         self.mix = make_mix(mix, weights=weights, K=self.K,
                             self_weight=self_weight, axis_name=axis_name,
                             **(mix_kwargs or {}))
+        self._mix_stateful = bool(getattr(self.mix, "stateful", False))
+        if self._mix_stateful and mix == "ring_local":
+            raise ValueError("stateful (error-feedback) mixes are not "
+                             "supported under the shard_map backend")
         alg = ALGORITHMS[algo]
         self._init_body = partial(alg.init, problem, cfg, hp, self.mix)
+        self._step_nomix = partial(alg.step, problem, cfg, hp)
         self._step_body = partial(alg.step, problem, cfg, hp, self.mix)
+        # node-axis sharding for mesh runs (GSPMD path; ring_local re-shards
+        # through its shard_map in_specs anyway)
+        self._node_sharding = (NamedSharding(mesh, P(axis_name))
+                               if mesh is not None else None)
         # buffer donation is a no-op (and warns) on CPU
         self._donate = (0,) if donate and jax.default_backend() != "cpu" else ()
         self._jit_cache: dict = {}
+
+    # -- carry plumbing (stateful mixes thread EF accumulators) -------------
+
+    def _carry_step(self, carry, batch, nkeys):
+        """One algorithm step over the scan carry. For stateful mixes the
+        carry is (state, mix_states); the per-call-site accumulators are
+        rebound each step in trace order."""
+        if not self._mix_stateful:
+            return self._step_body(carry, batch, nkeys)
+        state, mstates = carry
+        mix, out = self.mix.bind(mstates)
+        new_state = self._step_nomix(mix, state, batch, nkeys)
+        return (new_state, tuple(out))
+
+    def _carry_state(self, carry):
+        return carry[0] if self._mix_stateful else carry
+
+    def _mix_state0(self, state, batch, nkeys):
+        """Zero EF accumulators, one per mix call site of a step (shapes
+        discovered with eval_shape — trace order is deterministic)."""
+        sites: list = []
+
+        def probe(tree):
+            sites.append(jax.tree.map(
+                lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree))
+            return tree
+
+        jax.eval_shape(lambda s, b, k: self._step_nomix(probe, s, b, k),
+                       state, batch, nkeys)
+        return tuple(jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype), t)
+                     for t in sites)
 
     # -- building blocks ----------------------------------------------------
 
@@ -288,15 +432,18 @@ class Engine:
 
     @property
     def init(self):
-        """jit-ed init(X0, Y0, batch, keys) -> state."""
+        """jit-ed init(X0, Y0, batch, keys) -> state. Stateful mixes run
+        their stateless (zero-accumulator) form at t=0."""
         return self._cached("init", lambda: jax.jit(
             self._sharded(self._init_body, 4)))
 
     @property
     def step(self):
-        """jit-ed step(state, batch, node_keys) -> state (per-step dispatch)."""
+        """jit-ed step(carry, batch, node_keys) -> carry (per-step dispatch).
+        The carry is the algorithm state, or (state, mix_states) for
+        stateful mixes."""
         return self._cached("step", lambda: jax.jit(
-            self._sharded(self._step_body, 3)))
+            self._sharded(self._carry_step, 3)))
 
     @property
     def evaluate(self):
@@ -321,9 +468,11 @@ class Engine:
         * device sampler: sampling *inside* the scan — the whole eval
           interval is one device program with no host round-trips.
         """
-        K, step = self.K, self._step_body
+        K = self.K
 
         if self.mix_name == "ring_local":
+            step = self._step_body
+
             def chunk(state, batches, nkeys):
                 def body(s, x):
                     b, nk = x
@@ -336,19 +485,22 @@ class Engine:
             return jax.jit(chunk, donate_argnums=self._donate)
 
         if host:
-            def chunk(state, batches, nkeys):
-                def body(s, x):
+            def chunk(carry, batches, nkeys):
+                def body(c, x):
                     b, nk = x
-                    s = step(s, b, nk)
-                    return s, (consensus_error(s.x), consensus_error(s.y))
-                return jax.lax.scan(body, state, (batches, nkeys))
+                    c = self._carry_step(c, b, nk)
+                    s = self._carry_state(c)
+                    return c, (consensus_error(s.x), consensus_error(s.y))
+                return jax.lax.scan(body, carry, (batches, nkeys))
         else:
-            def chunk(state, kbs, kns):
-                def body(s, kk):
+            def chunk(carry, kbs, kns):
+                def body(c, kk):
                     kb, kn = kk
-                    s = step(s, sample_batch(kb), jax.random.split(kn, K))
-                    return s, (consensus_error(s.x), consensus_error(s.y))
-                return jax.lax.scan(body, state, (kbs, kns))
+                    c = self._carry_step(c, sample_batch(kb),
+                                         jax.random.split(kn, K))
+                    s = self._carry_state(c)
+                    return c, (consensus_error(s.x), consensus_error(s.y))
+                return jax.lax.scan(body, carry, (kbs, kns))
 
         return jax.jit(chunk, donate_argnums=self._donate)
 
@@ -364,38 +516,52 @@ class Engine:
         return self._jit_cache[key][1]
 
     def _stack_batches(self, sample_batch, kb_chunk, host: bool):
-        """Per-step batches stacked on a leading time axis for the scan."""
+        """Per-step batches stacked on a leading time axis for the scan.
+        Mesh runs place the stack node-sharded (time axis replicated)."""
         if host:
             bs = [sample_batch(kb_chunk[i]) for i in range(kb_chunk.shape[0])]
-            return jax.tree.map(lambda *xs: jnp.stack(xs), *bs)
-        return jax.vmap(sample_batch)(kb_chunk)
+            out = jax.tree.map(lambda *xs: jnp.stack(xs), *bs)
+        else:
+            out = jax.vmap(sample_batch)(kb_chunk)
+        if self.mesh is not None:
+            tsh = NamedSharding(self.mesh, P(None, self.axis_name))
+            out = jax.tree.map(lambda a: jax.device_put(a, tsh), out)
+        return out
 
     # -- the run loop -------------------------------------------------------
 
-    def run(self, sample_batch: Callable[[jax.Array], Any], eval_batch: Any,
-            steps: int, seed: int = 0, eval_every: int = 10,
+    def run(self, sample_batch: Callable[[jax.Array], Any] | Sampler,
+            eval_batch: Any, steps: int, seed: int = 0, eval_every: int = 10,
             init_batch_scale: int = 1,
             extra_metrics: Callable[[Any, Any], dict] | None = None,
             x0: Any | None = None, y0: Any | None = None,
-            return_state: bool = False) -> RunResult:
+            return_state: bool = False,
+            on_eval: Callable[[int, Any], None] | None = None) -> RunResult:
         """Run the configured algorithm for ``steps`` iterations.
 
-        sample_batch(key) must return {'f','g','h'} with node axis K (and J
-        axis on 'h'); eval_batch is a *global* batch for diagnostics.
+        sample_batch is a :class:`Sampler` or bare callable returning
+        {'f','g','h'} with node axis K (and J axis on 'h'); eval_batch is a
+        *global* batch for diagnostics. ``on_eval(t, state)`` fires after
+        every recorded eval boundary (t=0 included) — the checkpointing hook
+        used by ``repro.launch.train``.
         """
         del init_batch_scale  # accepted for API compatibility
         K = self.K
-        host = bool(getattr(sample_batch, "host_sampler", False))
+        host = is_host_sampler(sample_batch)
 
         key = jax.random.PRNGKey(seed)
         kx, ky, key = jax.random.split(key, 3)
-        X0 = replicate(self.problem.init_x(kx) if x0 is None else x0, K)
-        Y0 = replicate(self.problem.init_y(ky) if y0 is None else y0, K)
+        X0 = replicate(self.problem.init_x(kx) if x0 is None else x0, K,
+                       sharding=self._node_sharding)
+        Y0 = replicate(self.problem.init_y(ky) if y0 is None else y0, K,
+                       sharding=self._node_sharding)
 
         key, k0 = jax.random.split(key)
         kb0, kn0 = jax.random.split(k0)  # independent batch / J̃ init keys
-        state = self.init(X0, Y0, sample_batch(kb0),
-                          jax.random.split(kn0, K))
+        b0, nk0 = sample_batch(kb0), jax.random.split(kn0, K)
+        state = self.init(X0, Y0, b0, nk0)
+        carry = ((state, self._mix_state0(state, b0, nk0))
+                 if self._mix_stateful else state)
         kbs, kns = key_schedule(key, steps)
 
         in_scan = self.dispatch == "fused" and self.mix_name != "ring_local"
@@ -419,15 +585,17 @@ class Engine:
             if extra_metrics is not None:
                 for k, v in extra_metrics(state, eval_batch).items():
                     res.extra.setdefault(k, []).append(float(v))
+            if on_eval is not None:
+                on_eval(t, state)
 
-        record(0, state)
+        record(0, self._carry_state(carry))
 
         if self.dispatch == "per_step":
             for t in range(1, steps + 1):
-                state = self.step(state, sample_batch(kbs[t - 1]),
+                carry = self.step(carry, sample_batch(kbs[t - 1]),
                                   jax.random.split(kns[t - 1], K))
                 if t % eval_every == 0 or t == steps:
-                    record(t, state)
+                    record(t, self._carry_state(carry))
         else:
             chunk = self._chunk_fn(sample_batch, host)
             t = 0
@@ -437,15 +605,15 @@ class Engine:
                 if self.mix_name == "ring_local":
                     xs = self._stack_batches(sample_batch, kb_c, host)
                     nk = jax.vmap(lambda k: jax.random.split(k, K))(kn_c)
-                    state, trace = chunk(state, xs, nk), None
+                    carry, trace = chunk(carry, xs, nk), None
                 elif host:
                     xs = self._stack_batches(sample_batch, kb_c, host)
                     nk = jax.vmap(lambda k: jax.random.split(k, K))(kn_c)
-                    state, trace = chunk(state, xs, nk)
+                    carry, trace = chunk(carry, xs, nk)
                 else:
-                    state, trace = chunk(state, kb_c, kn_c)
+                    carry, trace = chunk(carry, kb_c, kn_c)
                 t += n
-                record(t, state, trace)
+                record(t, self._carry_state(carry), trace)
 
         res.wall_time_s = time.perf_counter() - t0
-        return (res, state) if return_state else res
+        return (res, self._carry_state(carry)) if return_state else res

@@ -1,3 +1,5 @@
+from repro.data.lm import (lm_batch_extras, make_device_lm_sampler,
+                           make_lm_step_batch, make_node_batch)
 from repro.data.synthetic import (Dataset, NodeSampler, audio_stub,
                                   lm_batch, make_classification,
                                   make_device_sampler, shard_to_nodes,
@@ -5,5 +7,7 @@ from repro.data.synthetic import (Dataset, NodeSampler, audio_stub,
                                   vision_stub)
 
 __all__ = ["Dataset", "NodeSampler", "audio_stub", "lm_batch",
-           "make_classification", "make_device_sampler", "shard_to_nodes",
-           "shard_to_nodes_noniid", "train_val_split", "vision_stub"]
+           "lm_batch_extras", "make_classification", "make_device_lm_sampler",
+           "make_device_sampler", "make_lm_step_batch", "make_node_batch",
+           "shard_to_nodes", "shard_to_nodes_noniid", "train_val_split",
+           "vision_stub"]

@@ -1,0 +1,64 @@
+"""Device-resident LM batch pipeline for the Engine's fused dispatch.
+
+Builds the trainer's step batches — ``{'f','g','h'}`` with node axis K, J
+axis on 'h', plus modality extras (vision/audio stubs) — as pure functions of
+a PRNG key, so :func:`make_device_lm_sampler` returns a
+:class:`repro.core.engine.DeviceSampler` the engine samples *inside* its
+scan-fused chunks: an entire ``eval_every`` LM interval is one device
+program with zero host round-trips.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.engine import DeviceSampler
+from repro.data.synthetic import audio_stub, lm_batch, vision_stub
+from repro.models.config import ModelConfig
+
+
+def lm_batch_extras(cfg: ModelConfig, key, batch: int, seq: int):
+    """Modality-stub extras for vlm/audio batches."""
+    extras = {}
+    if cfg.family == "vlm":
+        n = min(cfg.n_img_tokens, seq)
+        emb, pos = vision_stub(key, batch, n, cfg.d_model, seq,
+                               dtype=cfg.dtype)
+        extras["image_embeds"], extras["image_pos"] = emb, pos
+    if cfg.family == "audio":
+        extras["src_embeds"] = audio_stub(key, batch, cfg.src_len,
+                                          cfg.d_model, dtype=cfg.dtype)
+    return extras
+
+
+def make_node_batch(cfg: ModelConfig, key, per_node: int, seq: int):
+    b = lm_batch(key, cfg.vocab, per_node, seq)
+    b.update(lm_batch_extras(cfg, key, per_node, seq))
+    return b
+
+
+def make_lm_step_batch(cfg: ModelConfig, key, K: int, per_node: int,
+                       seq: int, *, J: int):
+    """{'f','g','h'} with node axis K. The J Hessian minibatches ζ_1..ζ_J on
+    'h' (leading axes (K, J)) are i.i.d. fresh draws, as Eq. 4 requires —
+    each from its own subkey, independent of the ξ/ζ0 draws."""
+    kf, kg, kh = jax.random.split(key, 3)
+    stack = lambda kk: jax.vmap(
+        lambda k: make_node_batch(cfg, k, per_node, seq))(
+            jax.random.split(kk, K))
+    f, g = stack(kf), stack(kg)
+    h = jax.vmap(jax.vmap(lambda k: make_node_batch(cfg, k, per_node, seq)))(
+        jax.random.split(kh, (K, J)))
+    return {"f": f, "g": g, "h": h}
+
+
+def make_device_lm_sampler(cfg: ModelConfig, tc, K: int, per_node: int,
+                           seq: int) -> DeviceSampler:
+    """Pure-JAX in-scan sampler over synthetic LM token streams.
+
+    ``tc`` is anything exposing ``.J`` (e.g. ``repro.train.TrainerConfig``);
+    the returned sampler is device-resident, so the engine fuses batch
+    generation into its per-interval scan chunk.
+    """
+    J = int(tc.J)
+    return DeviceSampler(
+        lambda key: make_lm_step_batch(cfg, key, K, per_node, seq, J=J))

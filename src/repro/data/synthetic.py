@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.engine import DeviceSampler, Sampler
+
 
 # ---------------------------------------------------------------------------
 # Classification (paper §6)
@@ -59,19 +61,21 @@ def shard_to_nodes(ds: Dataset, K: int) -> list[Dataset]:
             for k in range(K)]
 
 
-class NodeSampler:
+class NodeSampler(Sampler):
     """Samples per-step {'f','g','h'} bilevel batches across K node datasets.
 
     f: validation batch, g: training batch (ζ0), h: J fresh training batches
     (ζ_1..ζ_J) — faithful to the paper's i.i.d. Neumann sampling.
 
     Draws come from a host-side numpy RNG (the ``key`` argument is ignored),
-    so the engine cannot trace this sampler into a scan: ``host_sampler``
-    tells it to pre-draw each chunk on the host and stack on a time axis.
-    For a fully device-resident run loop use :func:`make_device_sampler`.
+    so the engine cannot trace this sampler into a scan:
+    ``device_resident = False`` tells it to pre-draw each chunk on the host
+    and stack on a time axis. For a fully device-resident run loop use
+    :func:`make_device_sampler`.
     """
 
-    host_sampler = True
+    device_resident = False
+    host_sampler = True  # legacy attribute, pre-Sampler-protocol callers
 
     def __init__(self, train_nodes, val_nodes, batch: int, J: int, seed: int = 0):
         self.tr, self.va = train_nodes, val_nodes
@@ -82,7 +86,7 @@ class NodeSampler:
         idx = self.rng.integers(0, ds.n, size=n)
         return {"a": jnp.asarray(ds.a[idx]), "b": jnp.asarray(ds.b[idx])}
 
-    def __call__(self, _key=None):
+    def sample(self, _key=None):
         K, B, J = len(self.tr), self.batch, self.J
         f = [self._draw(self.va[k], B) for k in range(K)]
         g = [self._draw(self.tr[k], B) for k in range(K)]
@@ -98,7 +102,7 @@ class NodeSampler:
 
 
 def make_device_sampler(train_nodes: list[Dataset], val_nodes: list[Dataset],
-                        batch: int, J: int):
+                        batch: int, J: int) -> DeviceSampler:
     """jit-traceable :class:`NodeSampler` equivalent.
 
     Node datasets live as device-resident (K, n_k, ·) stacks and every draw
@@ -123,7 +127,7 @@ def make_device_sampler(train_nodes: list[Dataset], val_nodes: list[Dataset],
         return {"f": draw(kf, va_a, va_b), "g": draw(kg, tr_a, tr_b),
                 "h": jax.tree.map(lambda t: jnp.swapaxes(t, 0, 1), h)}
 
-    return sample
+    return DeviceSampler(sample)
 
 
 # ---------------------------------------------------------------------------

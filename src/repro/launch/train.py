@@ -1,7 +1,15 @@
-"""CLI trainer: decentralized bilevel (MDBO/VRDBO) or single-level GT-SGD.
+"""CLI trainer on the Engine substrate: decentralized bilevel (MDBO/VRDBO)
+or single-level GT-SGD.
+
+The run loop is :meth:`repro.core.engine.Engine.run` with ``dispatch="fused"``
+by default — every ``--eval-every`` interval compiles to ONE scan-fused device
+program with the LM batches sampled *inside* the scan
+(``data.make_device_lm_sampler``), and the engine's key schedule keeps the
+minibatch and per-node J̃ PRNG streams independent. Checkpoints are written at
+eval boundaries via ``repro.checkpoint.save``.
 
 On CPU this runs smoke-scale (reduced configs, tiny batches); on a TPU pod the
-same code paths run the full configs via the production mesh. Examples:
+same code path runs the full configs via the production mesh. Examples:
 
   python -m repro.launch.train --arch smollm-360m --reduced --steps 20
   python -m repro.launch.train --arch rwkv6-1.6b --reduced --algo vrdbo
@@ -9,18 +17,14 @@ same code paths run the full configs via the production mesh. Examples:
 from __future__ import annotations
 
 import argparse
-import time
-from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import save
 from repro.configs import get
-from repro.core.common import HParams, consensus_error, replicate
-from repro.models import loss_fn
-from repro.train import (TrainerConfig, make_mix, make_step_batch,
-                         make_step_fns)
+from repro.core.common import HParams
+from repro.data import make_device_lm_sampler, make_node_batch
+from repro.train import TrainerConfig, make_trainer_engine
 
 
 def main():
@@ -31,16 +35,20 @@ def main():
     ap.add_argument("--algo", default="mdbo",
                     choices=["mdbo", "vrdbo", "gt_sgd"])
     ap.add_argument("--mix", default="ring", choices=["ring", "dense"])
+    ap.add_argument("--dispatch", default="fused",
+                    choices=["fused", "per_step"])
     ap.add_argument("--nodes", type=int, default=4)
     ap.add_argument("--batch", type=int, default=2, help="per-node batch")
     ap.add_argument("--seq", type=int, default=32)
     ap.add_argument("--steps", type=int, default=10)
+    ap.add_argument("--eval-every", type=int, default=5,
+                    help="steps per fused chunk / eval + checkpoint boundary")
     ap.add_argument("--J", type=int, default=2)
     ap.add_argument("--eta", type=float, default=0.1)
     ap.add_argument("--beta1", type=float, default=0.05)
     ap.add_argument("--beta2", type=float, default=0.5)
+    ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
-    ap.add_argument("--log-every", type=int, default=1)
     args = ap.parse_args()
 
     spec = get(args.arch)
@@ -49,36 +57,29 @@ def main():
                        hp=HParams(eta=args.eta, beta1=args.beta1,
                                   beta2=args.beta2))
     K = args.nodes
-    problem, init_fn, step_fn = make_step_fns(cfg, tc)
-    mix = make_mix(tc, K)
+    problem, eng = make_trainer_engine(cfg, tc, K, dispatch=args.dispatch)
+    sampler = make_device_lm_sampler(cfg, tc, K, args.batch, args.seq)
+    eval_batch = make_node_batch(cfg, jax.random.PRNGKey(args.seed + 17),
+                                 args.batch, args.seq)
 
-    key = jax.random.PRNGKey(0)
-    X0 = replicate(problem.init_x(key), K)
-    Y0 = replicate(problem.init_y(key), K)
-    key, kb = jax.random.split(key)
-    batch = make_step_batch(cfg, tc, kb, K, args.batch, args.seq)
-    state = init_fn(mix, X0, Y0, batch, jax.random.split(kb, K))
-    step_jit = jax.jit(partial(step_fn, mix))
+    y_sh = jax.eval_shape(problem.init_y, jax.random.PRNGKey(0))
+    print(f"arch={cfg.name} algo={args.algo} K={K} dispatch={args.dispatch} "
+          f"params/node={sum(l.size for l in jax.tree.leaves(y_sh)):,}")
 
-    print(f"arch={cfg.name} algo={args.algo} K={K} "
-          f"params/node={sum(x.size for x in jax.tree.leaves(Y0)) // K:,}")
-    t0 = time.time()
-    for t in range(1, args.steps + 1):
-        key, kb = jax.random.split(key)
-        batch = make_step_batch(cfg, tc, kb, K, args.batch, args.seq)
-        state = step_jit(state, batch, jax.random.split(kb, K))
-        if t % args.log_every == 0:
-            y0 = jax.tree.map(lambda a: a[0], state.y)
-            b0 = jax.tree.map(lambda a: a[0], batch["g"])
-            loss = float(loss_fn(cfg, y0, b0))
-            cx = float(consensus_error(state.x))
-            print(f"step {t:4d} loss={loss:.4f} consensus_x={cx:.2e} "
-                  f"x̄={float(jnp.mean(state.x)):+.3f} "
-                  f"({time.time() - t0:.1f}s)", flush=True)
+    def on_eval(t, state):
+        if args.ckpt_dir and t > 0:
+            save(args.ckpt_dir, t, {"x": state.x, "y": state.y})
+
+    res = eng.run(sampler, eval_batch, steps=args.steps, seed=args.seed,
+                  eval_every=args.eval_every, on_eval=on_eval)
+    for row in res.as_rows():
+        print(f"step {row['step']:4d} val-loss={row['upper_loss']:.4f} "
+              f"train-obj={row['lower_loss']:.4f} "
+              f"consensus_x={row['consensus_x']:.2e}", flush=True)
+    print(f"wall={res.wall_time_s:.1f}s "
+          f"({args.steps / max(res.wall_time_s, 1e-9):.2f} steps/s)")
     if args.ckpt_dir:
-        path = save(args.ckpt_dir, args.steps,
-                    {"x": state.x, "y": state.y})
-        print("saved", path)
+        print("checkpoints in", args.ckpt_dir)
 
 
 if __name__ == "__main__":

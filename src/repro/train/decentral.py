@@ -1,15 +1,23 @@
-"""Decentralized bilevel LM trainer — the paper's technique at production scale.
+"""Decentralized bilevel LM training — thin adapters over the Engine.
 
-Builds jit-able step functions where:
+Since the one-substrate refactor this module no longer builds its own step
+loop: it maps a :class:`TrainerConfig` + :class:`ModelConfig` onto
+:class:`repro.core.engine.Engine` via :func:`make_trainer_engine`, and the
+Engine's scan-fused chunks, mix-backend registry and key schedule drive the
+run (``repro.launch.train`` and ``examples/decentralized_lm_pretrain.py``
+are plain ``Engine.run`` callers). What stays here:
 
-* ``dp`` mode (paper-faithful): K = data-axis participants, each holding its
-  own (x, θ) copy (leading node axis sharded over ``data``), tensor-sharded
-  over ``model``. Gossip mixing runs over the node axis.
-* ``fsdp_gt`` mode: K = pods; parameters FSDP-sharded over (data × model)
-  inside each node; gradient tracking runs between pods.
+* the trainer's node-placement policy — ``dp`` mode (paper-faithful): K =
+  data-axis participants, each holding its own (x, θ) copy, node axis
+  ``data``; ``fsdp_gt`` mode: K = pods, params FSDP-sharded inside each node,
+  node axis ``pod`` (:func:`n_nodes` / :func:`node_axis_name` read it off the
+  :class:`ArchSpec`, and :func:`make_trainer_engine` forwards the mesh + axis
+  to the Engine's mesh-aware chunks);
+* the LM bilevel problem/hypergrad wiring (:func:`make_problem`);
+* shape/spec helpers for the dry-run lowering path.
 
-Algorithms: 'mdbo' (Alg. 1), 'vrdbo' (Alg. 2), plus 'gt_sgd' — single-level
-gradient-tracking SGD ablation (no bilevel structure; V/Z^g only).
+Algorithms come from the Engine registry: 'mdbo' (Alg. 1), 'vrdbo' (Alg. 2),
+and 'gt_sgd' — single-level gradient-tracking SGD ablation.
 """
 from __future__ import annotations
 
@@ -20,17 +28,22 @@ from typing import Any
 import jax
 
 from repro.configs.base import ArchSpec
-from repro.configs.registry import InputShape
 from repro.core import mdbo, vrdbo
 from repro.core.common import HParams
+from repro.core.engine import ALGORITHMS, Engine
 from repro.core.engine import make_mix as make_engine_mix
 from repro.core.hypergrad import HypergradConfig
-from repro.data.synthetic import lm_batch
-from repro.models import init_params, loss_fn
+from repro.data.lm import (lm_batch_extras, make_lm_step_batch,
+                           make_node_batch)
 from repro.models.config import ModelConfig
 from repro.train.bilevel_lm import make_lm_bilevel_problem, x_dim
 
 Tree = Any
+
+__all__ = ["TrainerConfig", "lm_batch_extras", "make_mix", "make_node_batch",
+           "make_problem", "make_step_batch", "make_step_fns",
+           "make_trainer_engine", "n_nodes", "node_axis_name",
+           "node_keys_spec", "state_shape", "step_batch_specs"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -52,104 +65,72 @@ def node_axis_name(spec: ArchSpec) -> str:
     return "pod" if spec.train_mode == "fsdp_gt" else "data"
 
 
+def _mix_name(tc: TrainerConfig) -> str:
+    """'ring' is kept as an alias of the registry's 'ring_rolled' backend."""
+    return {"ring": "ring_rolled"}.get(tc.mix, tc.mix)
+
+
 def make_mix(tc: TrainerConfig, K: int):
     """Resolve tc.mix through the engine's mix-backend registry.
 
-    'ring' is kept as an alias of the registry's 'ring_rolled' backend;
-    'dense' builds the ring-W einsum (the paper-faithful default)."""
+    'dense' builds the ring-W einsum (the paper-faithful default); K=1
+    degenerates to the identity."""
     if K == 1:
         return lambda tree: tree
-    name = {"ring": "ring_rolled"}.get(tc.mix, tc.mix)
-    return make_engine_mix(name, K=K)
+    return make_engine_mix(_mix_name(tc), K=K)
+
+
+def make_problem(model_cfg: ModelConfig, tc: TrainerConfig):
+    """(BilevelProblem, HypergradConfig) for the LM regularization problem."""
+    problem = make_lm_bilevel_problem(model_cfg)
+    hcfg = HypergradConfig(J=tc.J, lip_gy=problem.lip_gy, randomize=True)
+    return problem, hcfg
+
+
+def make_trainer_engine(model_cfg: ModelConfig, tc: TrainerConfig, K: int, *,
+                        mesh=None, axis_name: str = "data",
+                        dispatch: str = "fused", mix: str | None = None,
+                        mix_kwargs: dict | None = None):
+    """Build the Engine that runs the decentralized LM trainer.
+
+    Returns ``(problem, engine)``. With a ``mesh``, the node axis is
+    ``axis_name`` (``data`` for dp, ``pod`` for fsdp_gt — see
+    :func:`node_axis_name`) and the gossip runs as the shard_map
+    ``ring_local`` backend, one node per mesh shard; the dense/rolled ring
+    backends are mapped onto it automatically since they cannot act across
+    shards from inside a shard.
+    """
+    problem, hcfg = make_problem(model_cfg, tc)
+    name = mix or _mix_name(tc)
+    if mesh is not None and name in ("dense", "ring_rolled"):
+        name = "ring_local"
+    eng = Engine(problem, hcfg, tc.hp, K, algo=tc.algo, mix=name,
+                 dispatch=dispatch, mesh=mesh, axis_name=axis_name,
+                 mix_kwargs=mix_kwargs)
+    return problem, eng
 
 
 def make_step_fns(model_cfg: ModelConfig, tc: TrainerConfig):
-    """(init_fn, step_fn) over node-stacked MDBO/VRDBO state."""
-    problem = make_lm_bilevel_problem(model_cfg)
-    hcfg = HypergradConfig(J=tc.J, lip_gy=problem.lip_gy, randomize=True)
-
-    if tc.algo == "mdbo":
-        init = partial(mdbo.init, problem, hcfg, tc.hp)
-        step = partial(mdbo.step, problem, hcfg, tc.hp)
-    elif tc.algo == "vrdbo":
-        init = partial(vrdbo.init, problem, hcfg, tc.hp)
-        step = partial(vrdbo.step, problem, hcfg, tc.hp)
-    elif tc.algo == "gt_sgd":
-        init, step = _gt_sgd_fns(model_cfg, tc)
-    else:
+    """(problem, init_fn, step_fn) over node-stacked state, pulled from the
+    Engine's algorithm registry — kept for the dry-run lowering path and for
+    parity tests that hand-roll the legacy per-step loop."""
+    problem, hcfg = make_problem(model_cfg, tc)
+    if tc.algo not in ALGORITHMS:
         raise ValueError(tc.algo)
+    alg = ALGORITHMS[tc.algo]
+    init = partial(alg.init, problem, hcfg, tc.hp)
+    step = partial(alg.step, problem, hcfg, tc.hp)
     return problem, init, step
 
 
-def _gt_sgd_fns(model_cfg: ModelConfig, tc: TrainerConfig):
-    """Single-level decentralized gradient-tracking SGD (ablation)."""
-    from repro.core.tracking import param_update, track_update
-
-    def grads(Y, batch, _keys):
-        return jax.vmap(lambda y, b: jax.grad(
-            lambda yy: loss_fn(model_cfg, yy, b))(y))(Y, batch["g"])
-
-    def init(mix, X0, Y0, batch, keys):
-        from repro.core.hypergrad import tree_zeros_like
-        dg = grads(Y0, batch, keys)
-        y1 = param_update(Y0, dg, tc.hp.eta, tc.hp.beta2, mix)
-        # the upper level is inert in this ablation: its estimator/tracker
-        # slots must be zero, not copies of X0, or diagnostics that read
-        # estimator norms report parameter magnitudes.
-        return mdbo.MDBOState(x=X0, y=y1, u=tree_zeros_like(X0), v=dg,
-                              zf=tree_zeros_like(X0), zg=dg)
-
-    def step(mix, state, batch, keys):
-        dg = grads(state.y, batch, keys)
-        a2 = tc.hp.alpha2 * tc.hp.eta
-        v_new = jax.tree.map(lambda v, d: (1 - a2) * v + a2 * d, state.v, dg)
-        zg_new = track_update(state.zg, v_new, state.v, mix)
-        y_new = param_update(state.y, zg_new, tc.hp.eta, tc.hp.beta2, mix)
-        return mdbo.MDBOState(x=state.x, y=y_new, u=state.u, v=v_new,
-                              zf=state.zf, zg=zg_new)
-
-    return init, step
-
-
 # ---------------------------------------------------------------------------
-# Batches
+# Batches (built by repro.data.lm; tc-flavored wrapper kept for callers)
 # ---------------------------------------------------------------------------
-
-def lm_batch_extras(cfg: ModelConfig, key, batch: int, seq: int):
-    """Modality-stub extras for vlm/audio batches."""
-    from repro.data.synthetic import audio_stub, vision_stub
-    extras = {}
-    if cfg.family == "vlm":
-        n = min(cfg.n_img_tokens, seq)
-        emb, pos = vision_stub(key, batch, n, cfg.d_model, seq,
-                               dtype=cfg.dtype)
-        extras["image_embeds"], extras["image_pos"] = emb, pos
-    if cfg.family == "audio":
-        from repro.data.synthetic import audio_stub
-        extras["src_embeds"] = audio_stub(key, batch, cfg.src_len,
-                                          cfg.d_model, dtype=cfg.dtype)
-    return extras
-
-
-def make_node_batch(cfg: ModelConfig, key, per_node: int, seq: int):
-    b = lm_batch(key, cfg.vocab, per_node, seq)
-    b.update(lm_batch_extras(cfg, key, per_node, seq))
-    return b
-
 
 def make_step_batch(cfg: ModelConfig, tc: TrainerConfig, key, K: int,
                     per_node: int, seq: int):
-    """{'f','g','h'} with node axis K. The J Hessian minibatches ζ_1..ζ_J on
-    'h' (leading axes (K, J)) are i.i.d. fresh draws, as Eq. 4 requires —
-    each from its own subkey, independent of the ξ/ζ0 draws."""
-    kf, kg, kh = jax.random.split(key, 3)
-    stack = lambda kk: jax.vmap(
-        lambda k: make_node_batch(cfg, k, per_node, seq))(
-            jax.random.split(kk, K))
-    f, g = stack(kf), stack(kg)
-    h = jax.vmap(jax.vmap(lambda k: make_node_batch(cfg, k, per_node, seq)))(
-        jax.random.split(kh, (K, tc.J)))
-    return {"f": f, "g": g, "h": h}
+    """{'f','g','h'} with node axis K — see data.make_lm_step_batch."""
+    return make_lm_step_batch(cfg, key, K, per_node, seq, J=tc.J)
 
 
 def step_batch_specs(cfg: ModelConfig, tc: TrainerConfig, K: int,

@@ -58,6 +58,69 @@ def test_compressed_mix_still_contracts_consensus():
     assert cons(x) < c0
 
 
+def test_error_feedback_ratio_one_matches_plain_compressed():
+    """C = identity ⇒ h jumps straight to A and EF == plain compressed mix
+    == exact dense mix (same tensordot form, bitwise)."""
+    from repro.core.compression import ErrorFeedbackMix
+    K = 6
+    rng = np.random.default_rng(4)
+    x = {"w": jnp.asarray(rng.normal(size=(K, 5)).astype(np.float32))}
+    W = ring(K).weights
+    ef = ErrorFeedbackMix(W, topk_sparsify(1.0))
+    plain = compressed_mix(W, topk_sparsify(1.0))
+    np.testing.assert_array_equal(np.asarray(ef(x)["w"]),
+                                  np.asarray(plain(x)["w"]))
+
+
+def test_error_feedback_accumulator_converges_to_exact_mix():
+    """Iterating EF21 on a FIXED input drives the innovation to zero: the
+    proxy h → A and the mix output → the exact W·A, even at ratio 0.25 —
+    plain compressed gossip stays biased forever on the same input."""
+    from repro.core.compression import ErrorFeedbackMix
+    K = 6
+    rng = np.random.default_rng(5)
+    x = {"w": jnp.asarray(rng.normal(size=(K, 16)).astype(np.float32))}
+    W = ring(K).weights
+    exact = dense_mix(W)(x)["w"]
+    ef = ErrorFeedbackMix(W, topk_sparsify(0.25))
+    h = jax.tree.map(jnp.zeros_like, x)
+    for _ in range(8):  # ceil(1/ratio) rounds suffice for top-k
+        mix, out = ef.bind((h,))
+        mixed = mix(x)
+        (h,) = out
+    assert jnp.allclose(mixed["w"], exact, atol=1e-6)
+    biased = compressed_mix(W, topk_sparsify(0.25))(x)["w"]
+    assert not jnp.allclose(biased, exact, atol=1e-3)
+
+
+def test_error_feedback_random_sparsifier_is_contractive():
+    """Regression: EF21 with the unbiased (1/ratio-rescaled) random
+    sparsifier amplifies the innovation by 1/ratio per call and diverges
+    geometrically; the EF path must use the contractive mask-only variant,
+    under which iterating on a fixed input keeps the proxy bounded (it
+    converges to A on the kept coordinates)."""
+    from repro.core.compression import ErrorFeedbackMix
+    from repro.core.engine import make_mix
+    K = 6
+    rng = np.random.default_rng(6)
+    x = {"w": jnp.asarray(rng.normal(size=(K, 32)).astype(np.float32))}
+    W = ring(K).weights
+    ef = ErrorFeedbackMix(W, random_sparsify(0.25, rescale=False))
+    h = jax.tree.map(jnp.zeros_like, x)
+    for _ in range(12):
+        mix, out = ef.bind((h,))
+        mixed = mix(x)
+        (h,) = out
+    bound = 2.0 * float(jnp.linalg.norm(x["w"]))
+    assert float(jnp.linalg.norm(h["w"])) < bound
+    assert float(jnp.linalg.norm(mixed["w"])) < bound
+    # and the registered engine backend builds exactly this variant
+    eng_mix = make_mix("compressed_rand", K=K, ratio=0.25,
+                       error_feedback=True)
+    m2, out2 = eng_mix.bind((jax.tree.map(jnp.zeros_like, x),))
+    assert float(jnp.linalg.norm(m2(x)["w"])) < bound
+
+
 def test_comm_bytes_accounting():
     tree = {"w": jnp.zeros((4, 100), jnp.float32)}
     full = comm_bytes_per_mix(tree, 1.0)

@@ -99,6 +99,37 @@ def test_host_sampler_fused_bitwise_equals_per_step(setup):
     _assert_trees_bitwise_equal(out["fused"], out["per_step"])
 
 
+@pytest.mark.parametrize("mix", ["compressed_topk", "compressed_rand"])
+def test_error_feedback_fused_bitwise_equals_per_step(setup, mix):
+    """EF21 accumulators ride the scan carry: threading them through fused
+    chunks must not change numerics vs the per-step loop."""
+    prob, cfg, hp, sample, eval_batch, _ = setup
+    out = {}
+    for dispatch in ("fused", "per_step"):
+        eng = Engine(prob, cfg, hp, ring(K), algo="mdbo", mix=mix,
+                     dispatch=dispatch,
+                     mix_kwargs={"ratio": 0.25, "error_feedback": True})
+        out[dispatch] = eng.run(sample, eval_batch, steps=7, eval_every=3,
+                                seed=0, return_state=True)
+    (rf, sf), (rp, sp) = out["fused"], out["per_step"]
+    _assert_trees_bitwise_equal(sf, sp)
+    assert rf.upper_loss == rp.upper_loss
+
+
+def test_error_feedback_improves_consensus_at_aggressive_ratio(setup):
+    """The point of EF21: at a small keep ratio the biased compressed gossip
+    stalls consensus; the accumulators recover it."""
+    prob, cfg, hp, sample, eval_batch, _ = setup
+    cons = {}
+    for ef in (False, True):
+        eng = Engine(prob, cfg, hp, ring(K), algo="mdbo",
+                     mix="compressed_topk",
+                     mix_kwargs={"ratio": 0.05, "error_feedback": ef})
+        res = eng.run(sample, eval_batch, steps=30, eval_every=30, seed=0)
+        cons[ef] = res.consensus_x[-1]
+    assert cons[True] <= cons[False]
+
+
 def test_key_schedule_batch_and_jtilde_streams_differ():
     """Regression for the seed driver's key reuse: the minibatch stream and
     the per-node J̃ stream must never share a key (nor repeat one)."""

@@ -1,0 +1,220 @@
+"""The Engine-backed LM trainer: bitwise parity with the legacy per-step
+loop, PRNG stream hygiene, and mesh-aware execution.
+
+Parity contract (mdbo, vrdbo AND the single-level gt_sgd ablation, shared
+key schedule):
+
+* ``dispatch='per_step'`` reproduces the pre-port hand-rolled
+  jit-per-step loop **bit for bit** — full state, every leaf.
+* ``dispatch='fused'`` reproduces the legacy loop bit for bit on every
+  *trajectory* leaf (x, y, x_prev/y_prev, v, zg — i.e. both parameter
+  streams and the whole lower level). The upper-level hypergradient
+  estimators u/zf (Neumann-path accumulators, ~1e-7 magnitude at smoke
+  scale) may differ in their last float32 bits: XLA:CPU reassociates the
+  hypergrad reductions differently inside a scanned body than in a
+  standalone program. Those last-bit deltas are below the ulp of every
+  parameter they feed, so the parameters stay bitwise identical — which is
+  what the fused==per_step tests pin down.
+
+Mesh: a forced-host-device subprocess smoke drives both node-axis layouts,
+``dp`` (node axis = data) and ``fsdp_gt`` (node axis = pod), through
+``make_debug_mesh`` + the engine's shard_map ring.
+"""
+import os
+import subprocess
+import sys
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.core.common import HParams, replicate
+from repro.core.engine import key_schedule
+from repro.data import make_device_lm_sampler, make_node_batch
+from repro.train import (TrainerConfig, make_mix, make_step_fns,
+                         make_trainer_engine)
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+K, SEQ = 2, 8
+
+
+def tiny_cfg():
+    """Reduced SmolLM shrunk further — parity is shape-independent."""
+    return get("smollm-360m").reduced().with_overrides(
+        d_model=32, n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64, vocab=64)
+
+
+def tiny_tc(algo):
+    return TrainerConfig(algo=algo, J=1, mix="ring",
+                         hp=HParams(eta=0.1, beta1=0.05, beta2=0.5))
+
+
+def _assert_trees_bitwise_equal(a, b):
+    for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+
+
+# hypergrad-estimator fields where XLA:CPU scan-vs-standalone reassociation
+# may flip the last float32 bit; everything else must match exactly
+_ESTIMATOR_FIELDS = ("u", "zf")
+
+
+def _assert_states_match(fused_state, ref_state):
+    for name in ref_state._fields:
+        a, b = getattr(fused_state, name), getattr(ref_state, name)
+        if name in _ESTIMATOR_FIELDS:
+            for la, lb in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+                np.testing.assert_allclose(np.asarray(la), np.asarray(lb),
+                                           rtol=1e-5, atol=1e-10)
+        else:
+            _assert_trees_bitwise_equal(a, b)
+
+
+def _legacy_loop_state(cfg, tc, sampler, steps, seed):
+    """The pre-port hand-rolled loop: raw init/step from the registry,
+    one jit call per iteration, engine key discipline."""
+    problem, init_fn, step_fn = make_step_fns(cfg, tc)
+    mix = make_mix(tc, K)
+    key = jax.random.PRNGKey(seed)
+    kx, ky, key = jax.random.split(key, 3)
+    X0 = replicate(problem.init_x(kx), K)
+    Y0 = replicate(problem.init_y(ky), K)
+    key, k0 = jax.random.split(key)
+    kb0, kn0 = jax.random.split(k0)
+    st = jax.jit(partial(init_fn, mix))(X0, Y0, sampler(kb0),
+                                        jax.random.split(kn0, K))
+    kbs, kns = key_schedule(key, steps)
+    step_jit = jax.jit(partial(step_fn, mix))
+    for t in range(steps):
+        st = step_jit(st, sampler(kbs[t]), jax.random.split(kns[t], K))
+    return st
+
+
+@pytest.mark.parametrize("algo", ["mdbo", "vrdbo", "gt_sgd"])
+def test_engine_per_step_bitwise_matches_legacy_loop(algo):
+    """per_step dispatch == the deleted hand-rolled loop, every leaf
+    bitwise, under the shared key schedule."""
+    cfg, tc, steps, seed = tiny_cfg(), tiny_tc(algo), 5, 3
+    sampler = make_device_lm_sampler(cfg, tc, K, 1, SEQ)
+    eval_batch = make_node_batch(cfg, jax.random.PRNGKey(17), 1, SEQ)
+    _, eng = make_trainer_engine(cfg, tc, K, dispatch="per_step")
+    _, st = eng.run(sampler, eval_batch, steps=steps, eval_every=2,
+                    seed=seed, return_state=True)
+    _assert_trees_bitwise_equal(st, _legacy_loop_state(cfg, tc, sampler,
+                                                       steps, seed))
+
+
+@pytest.mark.parametrize("algo", ["mdbo", "vrdbo", "gt_sgd"])
+def test_engine_fused_matches_legacy_loop(algo):
+    """Fused trajectories == legacy loop: parameters and lower level
+    bitwise; hypergrad estimators to scan-reassociation tolerance (5 steps,
+    eval_every=2 → exercises full AND partial chunks)."""
+    cfg, tc, steps, seed = tiny_cfg(), tiny_tc(algo), 5, 3
+    sampler = make_device_lm_sampler(cfg, tc, K, 1, SEQ)
+    eval_batch = make_node_batch(cfg, jax.random.PRNGKey(17), 1, SEQ)
+    _, eng = make_trainer_engine(cfg, tc, K)
+    assert eng.dispatch == "fused"
+    _, st_fused = eng.run(sampler, eval_batch, steps=steps, eval_every=2,
+                          seed=seed, return_state=True)
+    _assert_states_match(st_fused, _legacy_loop_state(cfg, tc, sampler,
+                                                      steps, seed))
+
+
+def test_engine_lm_trainer_fused_equals_per_step():
+    """Both dispatch modes: parameter/lower-level streams bitwise, recorded
+    eval trajectories exactly equal."""
+    cfg, tc = tiny_cfg(), tiny_tc("mdbo")
+    sampler = make_device_lm_sampler(cfg, tc, K, 1, SEQ)
+    eval_batch = make_node_batch(cfg, jax.random.PRNGKey(17), 1, SEQ)
+    out = {}
+    for dispatch in ("fused", "per_step"):
+        _, eng = make_trainer_engine(cfg, tc, K, dispatch=dispatch)
+        out[dispatch] = eng.run(sampler, eval_batch, steps=4, eval_every=2,
+                                seed=0, return_state=True)
+    (rf, sf), (rp, sp) = out["fused"], out["per_step"]
+    _assert_states_match(sf, sp)
+    assert rf.steps == rp.steps == [0, 2, 4]
+    assert rf.upper_loss == rp.upper_loss  # recorded floats, exactly
+    assert rf.consensus_x == rp.consensus_x
+
+
+def test_trainer_batch_and_node_key_streams_distinct():
+    """Regression for the pre-port key reuse (`kb` seeded both the step batch
+    and the per-node J̃ fan-out; X0/Y0 shared one key): the trainer now routes
+    every stream through engine.key_schedule — the batch keys the sampler
+    sees are exactly the schedule's kbs and disjoint from its kns."""
+    cfg, tc, steps, seed = tiny_cfg(), tiny_tc("mdbo"), 3, 0
+    inner = make_device_lm_sampler(cfg, tc, K, 1, SEQ)
+    seen = []
+
+    def spy(key):
+        seen.append(np.asarray(key))
+        return inner(key)
+
+    _, eng = make_trainer_engine(cfg, tc, K, dispatch="per_step")
+    eval_batch = make_node_batch(cfg, jax.random.PRNGKey(17), 1, SEQ)
+    eng.run(spy, eval_batch, steps=steps, eval_every=steps, seed=seed)
+
+    key = jax.random.PRNGKey(seed)
+    _, _, key = jax.random.split(key, 3)          # kx, ky
+    key, k0 = jax.random.split(key)
+    kb0, kn0 = jax.random.split(k0)
+    kbs, kns = key_schedule(key, steps)
+    expected = [np.asarray(kb0)] + [np.asarray(k) for k in kbs]
+    assert len(seen) == steps + 1
+    for got, want in zip(seen, expected):
+        np.testing.assert_array_equal(got, want)
+    # batch stream ∩ node/J̃ stream = ∅
+    node_keys = {bytes(np.asarray(k)) for k in kns} | {bytes(np.asarray(kn0))}
+    assert all(bytes(k) not in node_keys for k in seen)
+
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import jax, jax.numpy as jnp
+from repro.configs import get
+from repro.core.common import HParams
+from repro.data import make_device_lm_sampler, make_node_batch
+from repro.launch.mesh import make_debug_mesh
+from repro.train import (TrainerConfig, make_trainer_engine, n_nodes,
+                         node_axis_name)
+
+spec = get("smollm-360m")
+cfg = spec.reduced().with_overrides(
+    d_model=32, n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64, vocab=64)
+tc = TrainerConfig(algo="mdbo", J=1, mix="ring",
+                   hp=HParams(eta=0.1, beta1=0.05, beta2=0.5))
+
+for mode, multi_pod in (("dp", False), ("fsdp_gt", True)):
+    spec_m = dataclasses.replace(spec, train_mode=mode)
+    mesh = make_debug_mesh(multi_pod=multi_pod, data=2, model=2)
+    axis = node_axis_name(spec_m)
+    K = n_nodes(spec_m, mesh)
+    assert (axis, K) == (("pod", 2) if mode == "fsdp_gt" else ("data", 2))
+    _, eng = make_trainer_engine(cfg, tc, K, mesh=mesh, axis_name=axis)
+    assert eng.mix_name == "ring_local"
+    sampler = make_device_lm_sampler(cfg, tc, K, 1, 8)
+    eval_batch = make_node_batch(cfg, jax.random.PRNGKey(17), 1, 8)
+    res, st = eng.run(sampler, eval_batch, steps=4, eval_every=2,
+                      return_state=True)
+    assert all(jnp.isfinite(jnp.asarray(res.upper_loss)).tolist()), mode
+    for leaf in jax.tree.leaves(st.y):
+        assert bool(jnp.all(jnp.isfinite(leaf.astype(jnp.float32)))), mode
+    print(f"MESH_TRAINER_OK:{mode}:{axis}")
+"""
+
+
+@pytest.mark.slow
+def test_debug_mesh_trainer_smoke_dp_and_fsdp_gt():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    r = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                       text=True, env=env, cwd=ROOT, timeout=600)
+    assert r.returncode == 0, r.stdout[-2000:] + r.stderr[-2000:]
+    assert "MESH_TRAINER_OK:dp:data" in r.stdout
+    assert "MESH_TRAINER_OK:fsdp_gt:pod" in r.stdout
