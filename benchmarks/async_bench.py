@@ -1,0 +1,158 @@
+"""Async (stale-by-τ) vs synchronous gossip on *simulated wall-clock* time.
+
+The paper's rates count iterations; on a real network a synchronous gossip
+round costs ``compute + max over edges of comm delay`` — one straggling edge
+stalls every node (gradient tracking chains rounds, so the max is global).
+The ``async_gossip`` mix backend instead cuts every round off at a fixed
+``deadline``: edges that miss it leave the receiver mixing with its cached
+(stale-by-≤τ) copy, so a round costs ``compute + deadline`` regardless of
+stragglers. This bench puts numbers on the trade on the §6 logreg workload:
+
+* per-iteration progress: async is (slightly) worse — stale neighbor values
+  degrade consensus exactly as the asynchronous-gossip analysis (Yang et
+  al., 2022) predicts;
+* wall-clock progress under a straggler-tailed :class:`EdgeDelayModel`:
+  async wins by roughly the sync-round/deadline ratio.
+
+Both runs share one engine substrate and one measured per-step compute cost;
+comm delays are drawn host-side from the same ``EdgeDelayModel`` that feeds
+the async backend's per-edge drop probabilities (``P(delay > deadline)``).
+Per step, the four mix call sites are modeled as ONE bundled exchange (the
+payloads ship in one message per neighbor per round).
+
+The τ=0 contract — async_gossip reproduces synchronous ring gossip bitwise —
+is asserted inline before timing. Results (curves + summary) land in
+``benchmarks/results/BENCH_async.json``.
+
+  PYTHONPATH=src python -m benchmarks.async_bench
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import J, PAPER_HP, build, write_bench_json
+from repro.core.engine import Engine
+from repro.core.topology import EdgeDelayModel, ring_edge_drop_probs
+from repro.data import make_device_sampler
+
+
+def _assert_tau0_bitwise(prob, cfg, hp, topo, sample, eval_batch, K):
+    """async_gossip(τ=0) == ring_rolled, bit for bit, drops notwithstanding."""
+    import jax
+    states = {}
+    for mix, mk in (("ring_rolled", None),
+                    ("async_gossip", {"tau": 0, "drop_prob": 0.5})):
+        eng = Engine(prob, cfg, hp, topo, algo="mdbo", mix=mix,
+                     dispatch="fused", mix_kwargs=mk)
+        states[mix] = eng.run(sample, eval_batch, steps=5, eval_every=5,
+                              seed=0, return_state=True)[1]
+    for a, b in zip(jax.tree.leaves(states["ring_rolled"]),
+                    jax.tree.leaves(states["async_gossip"])):
+        if not np.array_equal(np.asarray(a), np.asarray(b)):
+            raise AssertionError("async_gossip(tau=0) != ring_rolled bitwise")
+
+
+def main(steps: int = 60, K: int = 8, tau: int = 3, deadline_s: float = 4e-3,
+         dataset: str = "a9a-syn", seed: int = 0):
+    prob, cfg, sampler, topo = build(dataset, K)
+    sample = make_device_sampler(sampler.tr, sampler.va, batch=sampler.batch,
+                                 J=J)
+    eval_batch = sampler.eval_batch()
+    hp = PAPER_HP["mdbo"]
+    eval_every = max(steps // 10, 1)
+
+    _assert_tau0_bitwise(prob, cfg, hp, topo, sample, eval_batch, K)
+
+    # straggler-tailed delay model: cheap links (2 ms) that occasionally
+    # (15%) take an extra Exp(30 ms) — the regime where a global barrier hurts
+    model = EdgeDelayModel(base_s=2e-3, straggler_prob=0.15,
+                           straggler_scale_s=30e-3)
+    n_edges = 2 * K
+    drop = ring_edge_drop_probs(model, K, deadline_s)
+
+    runs, compute_s = {}, None
+    for name, mix, mk in (("sync", "ring_rolled", None),
+                          ("async", "async_gossip",
+                           {"tau": tau, "drop_prob": drop})):
+        eng = Engine(prob, cfg, hp, topo, algo="mdbo", mix=mix,
+                     dispatch="fused", mix_kwargs=mk)
+        eng.run(sample, eval_batch, steps=steps, eval_every=eval_every,
+                seed=seed)  # warm-up: compiles every chunk shape
+        res = eng.run(sample, eval_batch, steps=steps, eval_every=eval_every,
+                      seed=seed)
+        runs[name] = res
+        per_step = res.wall_time_s / steps
+        compute_s = per_step if compute_s is None else min(compute_s, per_step)
+
+    # simulated wall-clock per step (shared compute; comm from the model)
+    rng = np.random.default_rng(seed)
+    step_s = {
+        "sync": compute_s + model.sync_round_s(rng, n_edges, steps),
+        "async": np.full(steps, compute_s + deadline_s),
+    }
+    cum = {k: np.concatenate([[0.0], np.cumsum(v)]) for k, v in step_s.items()}
+    sim_time = {k: [float(cum[k][s]) for s in runs[k].steps] for k in runs}
+
+    # wall-clock to reach the worse of the two final losses
+    target = max(runs["sync"].upper_loss[-1], runs["async"].upper_loss[-1])
+
+    def time_to_target(name):
+        for s, loss in zip(sim_time[name], runs[name].upper_loss):
+            if loss <= target:
+                return s
+        return float("inf")
+
+    t_sync, t_async = time_to_target("sync"), time_to_target("async")
+    speedup = t_sync / t_async if t_async > 0 else float("inf")
+    mean_round = {k: float(np.mean(v)) for k, v in step_s.items()}
+
+    rows = []
+    for name in ("sync", "async"):
+        res = runs[name]
+        rows.append({
+            "name": f"async/logreg-mdbo/{name}",
+            "us_per_call": round(mean_round[name] * 1e6, 1),
+            "steps_per_sec": round(1.0 / mean_round[name], 1),
+            "derived": (f"final_loss={res.upper_loss[-1]:.4f};"
+                        f"consensus={res.consensus_x[-1]:.2e};"
+                        f"sim_wall_s={sim_time[name][-1]:.2f}"),
+        })
+    rows.append({
+        "name": "async/logreg-mdbo/wallclock_speedup",
+        "us_per_call": 0.0,
+        "steps_per_sec": "",
+        "derived": (f"time_to_loss_{target:.4f}: sync={t_sync:.2f}s "
+                    f"async={t_async:.2f}s speedup={speedup:.1f}x;"
+                    f"tau={tau};deadline_s={deadline_s};"
+                    f"drop_prob_mean={float(drop.mean()):.3f};"
+                    f"bitwise_tau0=ok"),
+    })
+
+    write_bench_json("async", {
+        "workload": {"dataset": dataset, "K": K, "algo": "mdbo",
+                     "steps": steps, "eval_every": eval_every},
+        "delay_model": {"base_s": model.base_s,
+                        "straggler_prob": model.straggler_prob,
+                        "straggler_scale_s": model.straggler_scale_s},
+        "tau": tau, "deadline_s": deadline_s,
+        "drop_prob_mean": float(drop.mean()),
+        "compute_s_per_step": compute_s,
+        "mean_round_s": mean_round,
+        "bitwise_tau0": True,
+        "target_loss": target,
+        "time_to_target_s": {"sync": t_sync, "async": t_async},
+        "wallclock_speedup_to_target": speedup,
+        "runs": {name: {
+            "steps": runs[name].steps,
+            "sim_time_s": sim_time[name],
+            "upper_loss": runs[name].upper_loss,
+            "consensus_x": runs[name].consensus_x,
+            "steps_per_sec_simulated": 1.0 / mean_round[name],
+        } for name in runs},
+    })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in main():
+        print(r)

@@ -7,6 +7,7 @@ J=10, η=0.1 (0.33 for VRDBO), β1=β2=1, α1=α2=1 (5 for VRDBO), ring network.
 """
 from __future__ import annotations
 
+import json
 import os
 
 from repro.core import HParams, HypergradConfig, logreg_hyperopt, ring
@@ -40,6 +41,18 @@ def build(dataset: str, K: int, batch_total: int = 400, seed: int = 0):
     prob = logreg_hyperopt(d=d, c=2, lip_gy=5.0)
     cfg = HypergradConfig(J=J, lip_gy=5.0, randomize=True)
     return prob, cfg, sampler, ring(K)
+
+
+def write_bench_json(name: str, payload: dict) -> str:
+    """Write ``benchmarks/results/BENCH_<name>.json`` — the machine-readable
+    perf record tracked across PRs (steps/sec, tokens/sec, consensus error,
+    wall-clock curves; whatever the bench measures). Returns the path."""
+    os.makedirs(RESULTS, exist_ok=True)
+    path = os.path.join(RESULTS, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True, default=float)
+        f.write("\n")
+    return path
 
 
 def write_csv(path: str, rows: list[dict]):

@@ -13,7 +13,7 @@ import time
 
 import jax.numpy as jnp
 
-from benchmarks.common import PAPER_HP, J
+from benchmarks.common import PAPER_HP, J, write_bench_json
 from repro.core import HypergradConfig, logreg_hyperopt, ring
 from repro.core.engine import Engine
 from repro.data import (make_classification, make_device_sampler,
@@ -40,6 +40,12 @@ def main(steps: int = 240, K: int = 8, d: int = 123, eval_every: int = 30):
         rates[dispatch] = steps / (time.perf_counter() - t0)
 
     speedup = rates["fused"] / rates["per_step"]
+    write_bench_json("engine", {
+        "workload": {"name": "logreg-mdbo", "K": K, "d": d, "steps": steps,
+                     "eval_every": eval_every},
+        "steps_per_sec": {k: float(v) for k, v in rates.items()},
+        "fused_vs_per_step": float(speedup),
+    })
     rows = []
     for dispatch in ("per_step", "fused"):
         rows.append({

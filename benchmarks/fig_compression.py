@@ -11,14 +11,14 @@ the accumulators un-bias the gossip fixed point at aggressive ratios for
 the same communicated bytes."""
 from __future__ import annotations
 
-from benchmarks.common import J, PAPER_HP, build
+from benchmarks.common import J, PAPER_HP, build, write_bench_json
 from repro.core.compression import comm_bytes_per_mix
 from repro.core.engine import Engine
 from repro.data import make_device_sampler
 
 
 def main(steps: int = 40, K: int = 8, dataset: str = "a9a-syn"):
-    rows = []
+    rows, records = [], []
     for ratio in (1.0, 0.25, 0.05):
         for ef in ((False,) if ratio >= 1.0 else (False, True)):
             prob, cfg, sampler, topo = build(dataset, K)
@@ -44,6 +44,20 @@ def main(steps: int = 40, K: int = 8, dataset: str = "a9a-syn"):
                             f"y_comm_bytes_per_round={comm};"
                             f"consensus={res.consensus_x[-1]:.2e}"),
             })
+            records.append({
+                # convergence/bytes only — no steps/sec here: these runs are
+                # single-shot (cold jit), so timing would mostly measure
+                # compiles; dispatch perf is engine_bench's warmed job
+                "ratio": ratio, "error_feedback": ef,
+                "final_loss": res.upper_loss[-1],
+                "consensus_x": res.consensus_x[-1],
+                "y_comm_bytes_per_round": comm,
+            })
+    write_bench_json("compression", {
+        "workload": {"dataset": dataset, "K": K, "algo": "mdbo",
+                     "steps": steps},
+        "runs": records,
+    })
     return rows
 
 

@@ -8,8 +8,13 @@ per-step dispatch ratio (logreg and Engine-backed LM trainer respectively).
   PYTHONPATH=src python -m benchmarks.run [--quick] [--all]
 
 ``--all`` covers every subsystem, adding the LM-trainer dispatch bench
-(``trainer_bench``) to the default figure + micro set; ``serve_bench`` is
-always part of the default set.
+(``trainer_bench``) and the async-gossip wall-clock bench (``async_bench``)
+to the default figure + micro set; ``serve_bench`` is always part of the
+default set.
+
+Perf-bearing benches additionally write machine-readable
+``benchmarks/results/BENCH_<name>.json`` records (steps/sec, tokens/sec,
+consensus error, wall-clock curves) so the trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -26,10 +31,11 @@ def main() -> None:
     args = ap.parse_args()
     steps = 30 if args.quick else 60
 
-    from benchmarks import (engine_bench, fig1_loss_curves, fig2_accuracy,
-                            fig3_speedup, fig_compression, fig_noniid,
-                            fig_topology, hypergrad_bench, mixing_bench,
-                            roofline_table, serve_bench, trainer_bench)
+    from benchmarks import (async_bench, engine_bench, fig1_loss_curves,
+                            fig2_accuracy, fig3_speedup, fig_compression,
+                            fig_noniid, fig_topology, hypergrad_bench,
+                            mixing_bench, roofline_table, serve_bench,
+                            trainer_bench)
 
     rows = []
     rows += fig1_loss_curves.main(steps=steps)
@@ -48,6 +54,7 @@ def main() -> None:
         rows += trainer_bench.main(steps=48 if args.quick else 96,
                                    eval_every=12 if args.quick else 24,
                                    repeats=1 if args.quick else 3)
+        rows += async_bench.main(steps=30 if args.quick else 60)
 
     print("name,us_per_call,steps_per_sec,derived")
     for r in rows:

@@ -24,6 +24,7 @@ import time
 import jax
 import numpy as np
 
+from benchmarks.common import write_bench_json
 from repro.configs import get
 from repro.models import init_params
 from repro.serve import ServeEngine
@@ -91,6 +92,17 @@ def main(n_requests: int = 18, max_batch: int = 4, decode_chunk: int = 8,
     rows.append(row("continuous+bucket/cold", drain(eng, workload)))
 
     speedup = warm["continuous"]["tok_s"] / warm["cohort"]["tok_s"]
+    write_bench_json("serve", {
+        "workload": {"arch": arch, "n_requests": n_requests,
+                     "max_batch": max_batch, "decode_chunk": decode_chunk},
+        "steady": {mode: {
+            "tokens_per_sec": float(warm[mode]["tok_s"]),
+            "lat_mean_s": warm[mode]["lat_mean_s"],
+            "lat_p95_s": warm[mode]["lat_p95_s"],
+            "decode_dispatches": warm[mode]["decode_dispatches"],
+        } for mode in warm},
+        "continuous_vs_cohort_tok_s": float(speedup),
+    })
     rows.append({
         "name": f"serve/{arch}/continuous_vs_cohort",
         "us_per_call": 0.0,

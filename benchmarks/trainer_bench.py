@@ -22,6 +22,7 @@ import time
 
 import jax
 
+from benchmarks.common import write_bench_json
 from repro.configs import get
 from repro.core.common import HParams
 from repro.data import make_device_lm_sampler, make_node_batch
@@ -50,6 +51,16 @@ def main(steps: int = 96, K: int = 4, per_node: int = 1, seq: int = 8,
         rates[dispatch] = best
 
     speedup = rates["fused"] / rates["per_step"]
+    tokens_per_step = K * per_node * seq
+    write_bench_json("trainer", {
+        "workload": {"name": f"smollm-reduced-{algo}", "K": K,
+                     "per_node": per_node, "seq": seq, "steps": steps,
+                     "eval_every": eval_every},
+        "steps_per_sec": {k: float(v) for k, v in rates.items()},
+        "tokens_per_sec": {k: float(v) * tokens_per_step
+                           for k, v in rates.items()},
+        "fused_vs_per_step": float(speedup),
+    })
     rows = []
     for dispatch in ("per_step", "fused"):
         rows.append({

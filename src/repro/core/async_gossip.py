@@ -1,0 +1,210 @@
+"""Asynchronous (stale-by-τ) gossip for the ring topology.
+
+The paper's algorithms assume *synchronous* gossip: every node waits for both
+ring neighbors before each of the four mix call sites of a step (Eqs. 8/9),
+so a single straggling edge stalls the whole round. This module implements
+the asynchronous regime studied by Yang et al. (Decentralized Gossip-Based
+Stochastic Bilevel Optimization, 2022): each node mixes with a **cached copy**
+of its neighbors' values and only refreshes the cache when the edge delivers
+in time, giving per-round wall-clock cost = a fixed deadline instead of the
+max over edge delays (``benchmarks/async_bench.py`` charts the tradeoff
+against ``core.topology.EdgeDelayModel``).
+
+Semantics of :class:`AsyncGossipMix`, per mix call site and per directed
+in-edge (left = from node i−1, right = from node i+1 on the ring):
+
+* a **double-buffered neighbor cache** ``h`` holds the last delivered value;
+  the fresh exchange lands in the front buffer and is committed to ``h`` only
+  if the edge delivered (Bernoulli ``1 − drop_prob``, per edge per call) OR
+  the cache has reached the staleness bound ``tau`` — so a used value is
+  never more than ``tau`` rounds old (a missed forced delivery is a modeling
+  impossibility, not a fallback path);
+* ``tau=0`` forces delivery on every edge every call: the mix degenerates to
+  synchronous ring gossip, **bitwise** equal to ``ring_rolled`` /
+  ``ring_local`` (same contraction order; pinned in
+  tests/test_async_gossip.py);
+* with a ``compressor`` the delivered payload is the EF21-compressed
+  innovation (``repro.core.compression.ef21_update``): the cache doubles as
+  the error-feedback proxy, composing staleness with compression.
+
+Execution modes: ``local=False`` exchanges via ``jnp.roll`` on the leading
+node axis (single-process); ``local=True`` exchanges via
+``jax.lax.ppermute`` and is meant to run inside ``shard_map`` with one node
+per shard of ``axis_name`` (the engine selects it automatically when a mesh
+is given). All cache/age/key state leaves carry a leading node axis K, so
+the engine's scan-carry threading (and its ``P(axis_name)`` sharding prefix)
+applies unchanged.
+
+Everything here is pure JAX: the caches, age counters and per-node PRNG keys
+live in the engine's scan carry (``state0`` builds the t=0 slot, ``bind``
+rebinds per traced step); nothing is host-side.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.compression import ef21_update
+
+
+def _tree_where(mask, a_tree, b_tree):
+    """Per-leaf ``where`` with a (K,) node mask broadcast over trailing dims."""
+    def leaf(a, b):
+        m = mask.reshape(mask.shape + (1,) * (a.ndim - 1))
+        return jnp.where(m, a, b)
+    return jax.tree.map(leaf, a_tree, b_tree)
+
+
+class AsyncGossipMix:
+    """Stale-by-τ ring gossip with a per-edge drop model (see module doc).
+
+    Parameters
+    ----------
+    K: ring size (must be ≥ 3 — the K≤2 rings have no distinct neighbors).
+    self_weight: W_ii of the ring mixing matrix; neighbors split the rest.
+    tau: staleness bound. 0 = synchronous (bitwise equal to ring gossip).
+    drop_prob: P(edge misses the deadline) per directed in-edge per call —
+        a scalar, or an array broadcastable to (K, 2) with columns
+        (left in-edge, right in-edge), e.g. from
+        ``EdgeDelayModel.drop_prob(deadline)``.
+    seed: base seed of the per-site, per-node drop-draw key streams.
+    compressor: optional EF21 payload compressor (e.g. ``topk_sparsify``);
+        delivered updates become compressed innovations against the cache.
+    axis_name / local: ppermute exchange inside shard_map when ``local``.
+    """
+
+    stateful = True
+
+    def __init__(self, K: int, *, self_weight: float = 1.0 / 3.0,
+                 tau: int = 0, drop_prob=0.0, seed: int = 0,
+                 compressor: Callable | None = None,
+                 axis_name: str = "data", local: bool = False):
+        if K < 3:
+            raise ValueError(f"async_gossip needs a ring of K>=3 nodes, got {K}")
+        if tau < 0:
+            raise ValueError(f"tau must be >= 0, got {tau}")
+        self.K, self.self_weight, self.tau = int(K), float(self_weight), int(tau)
+        self.nb = (1.0 - self_weight) / 2.0
+        p = jnp.broadcast_to(jnp.asarray(drop_prob, jnp.float32), (K, 2))
+        self.drop_prob = p
+        self.seed, self.compressor = int(seed), compressor
+        self.axis_name, self.local = axis_name, bool(local)
+        self.shard_local = bool(local)  # engine: run me under shard_map
+
+    # -- ring exchange (the only part that differs between modes) -----------
+
+    def _exchange(self, tree):
+        """(from_left, from_right) neighbor value trees for this round."""
+        if self.local:
+            n = self.K
+            to_left = [(i, (i - 1) % n) for i in range(n)]
+            to_right = [(i, (i + 1) % n) for i in range(n)]
+
+            def fl(a):
+                return jax.lax.ppermute(a, self.axis_name, to_right)
+
+            def fr(a):
+                return jax.lax.ppermute(a, self.axis_name, to_left)
+        else:
+            def fl(a):
+                return jnp.roll(a, 1, axis=0)
+
+            def fr(a):
+                return jnp.roll(a, -1, axis=0)
+        return jax.tree.map(fl, tree), jax.tree.map(fr, tree)
+
+    def _edge_drop_probs(self):
+        """The (K_local, 2) drop-probability rows owned by this shard/process."""
+        if self.local:
+            i = jax.lax.axis_index(self.axis_name)
+            return jax.lax.dynamic_slice_in_dim(self.drop_prob, i, 1, axis=0)
+        return self.drop_prob
+
+    def _weighted_sum(self, tree, h_left, h_right):
+        """self_weight·a + nb·left + nb·right, in the exact contraction order
+        of ``ring_mix_rolled`` / ``ring_mix_local`` (the τ=0 bitwise contract)."""
+        def leaf(a, hl, hr):
+            return (self.self_weight * a + self.nb * hl + self.nb * hr
+                    ).astype(a.dtype)
+        return jax.tree.map(leaf, tree, h_left, h_right)
+
+    # -- stateless form (t=0 init: no history exists yet, so fully sync) ----
+
+    def __call__(self, tree):
+        fl, fr = self._exchange(tree)
+        if self.compressor is not None:  # zero caches: delivered = C(fresh)
+            fl, fr = self.compressor(fl), self.compressor(fr)
+        return self._weighted_sum(tree, fl, fr)
+
+    # -- carry protocol (mirrors ErrorFeedbackMix) --------------------------
+
+    def state0(self, site_shapes, site_index: int):
+        """t=0 carry slot for one mix call site: zero caches, ages pinned at
+        ``tau`` (first touch force-refreshes every edge, so the zero buffers
+        are overwritten before they can ever enter a weighted sum), and one
+        fold_in-derived drop key per node."""
+        zeros = jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype),
+                             site_shapes)
+        ages = jnp.full((self.K,), self.tau, jnp.int32)
+        base = jax.random.fold_in(jax.random.PRNGKey(self.seed), site_index)
+        keys = jax.vmap(lambda i: jax.random.fold_in(base, i))(
+            jnp.arange(self.K))
+        return {"h_left": zeros, "h_right": jax.tree.map(jnp.copy, zeros),
+                "age_left": ages, "age_right": jnp.copy(ages), "keys": keys}
+
+    def apply(self, tree, st):
+        """One async gossip call: (mixed tree, updated cache state)."""
+        ks = jax.vmap(lambda k: jax.random.split(k, 3))(st["keys"])
+        new_keys, k_l, k_r = ks[:, 0], ks[:, 1], ks[:, 2]
+        p = self._edge_drop_probs()
+        land_l = jax.vmap(lambda k, pp: jax.random.bernoulli(k, 1.0 - pp))(
+            k_l, p[:, 0])
+        land_r = jax.vmap(lambda k, pp: jax.random.bernoulli(k, 1.0 - pp))(
+            k_r, p[:, 1])
+        force_l = land_l | (st["age_left"] >= self.tau)
+        force_r = land_r | (st["age_right"] >= self.tau)
+
+        fresh_l, fresh_r = self._exchange(tree)
+        if self.compressor is not None:
+            fresh_l = ef21_update(st["h_left"], fresh_l, self.compressor)
+            fresh_r = ef21_update(st["h_right"], fresh_r, self.compressor)
+        h_l = _tree_where(force_l, fresh_l, st["h_left"])
+        h_r = _tree_where(force_r, fresh_r, st["h_right"])
+        new_st = {
+            "h_left": h_l, "h_right": h_r,
+            "age_left": jnp.where(force_l, 0, st["age_left"] + 1),
+            "age_right": jnp.where(force_r, 0, st["age_right"] + 1),
+            "keys": new_keys,
+        }
+        return self._weighted_sum(tree, h_l, h_r), new_st
+
+    def bind(self, states):
+        """Close over per-call-site cache states for one traced step (same
+        trace-order contract as ``ErrorFeedbackMix.bind``)."""
+        it = iter(states)
+        out: list = []
+
+        def mix(tree):
+            mixed, st_new = self.apply(tree, next(it))
+            out.append(st_new)
+            return mixed
+
+        return mix, out
+
+
+def expected_staleness(tau: int, drop_prob: float) -> float:
+    """Mean age of a used neighbor value under the stale-by-τ chain.
+
+    The per-edge age follows a Markov chain on {0..tau}: refresh w.p.
+    ``1−drop_prob`` (or surely at age tau), else age+1. Closed form of the
+    stationary mean — a cheap analytic check for tests and benchmark tables.
+    """
+    q = float(np.clip(drop_prob, 0.0, 1.0))
+    if tau <= 0 or q == 0.0:
+        return 0.0
+    # stationary weights pi_a ∝ q^a for a = 0..tau
+    w = np.power(q, np.arange(tau + 1))
+    return float((np.arange(tau + 1) * w).sum() / w.sum())

@@ -10,6 +10,17 @@ where ``C`` is a per-leaf sparsifier. Only the compressed values would cross
 the network, so communicated bytes drop by the keep-ratio while the self term
 stays exact. Used by benchmarks/fig_compression.py to chart the
 bytes-vs-convergence tradeoff; not enabled in the paper-faithful baselines.
+
+Module contract: every function here is **pure JAX** and acts on node-stacked
+trees (leading axis K). The only state — the EF21 accumulators of
+:class:`ErrorFeedbackMix` — lives in the engine's *scan carry* (threaded per
+call site via :meth:`ErrorFeedbackMix.bind` / :meth:`ErrorFeedbackMix.state0`),
+never on the host; :func:`ef21_update` is the shared innovation-update rule
+also used by :class:`repro.core.async_gossip.AsyncGossipMix` to compose
+compression with stale gossip. The ``(W − I)·h`` application is pluggable:
+dense by default, or a shard-local ring operator (``ring_wmi_rolled`` /
+``ring_wmi_local``) so the accumulators can live one-node-per-shard under the
+engine's ``ring_local`` shard_map backend.
 """
 from __future__ import annotations
 
@@ -95,6 +106,64 @@ def compressed_mix(W, compressor: Callable) -> MixFn:
     return mix
 
 
+def ef21_update(h, fresh, compressor: Callable):
+    """The EF21 innovation rule: ``h' = h + C(fresh − h)``.
+
+    ``h`` is the receiver's proxy of the sender's value; only ``C(fresh − h)``
+    crosses the network. Shared by :class:`ErrorFeedbackMix` and the
+    stale-gossip composition in :class:`repro.core.async_gossip.AsyncGossipMix`.
+    """
+    return tree_add(h, compressor(tree_sub(fresh, h)))
+
+
+def dense_wmi(W) -> Callable:
+    """``tree ↦ (W − I)·tree`` via einsum with the full K×K matrix."""
+    Wn = np.asarray(W)
+    Wm = jnp.asarray(Wn - np.eye(Wn.shape[0]))
+
+    def apply(tree):
+        return jax.tree.map(
+            lambda hh: jnp.tensordot(Wm, hh, axes=([1], [0])), tree)
+
+    return apply
+
+
+def ring_wmi_rolled(self_weight: float = 1.0 / 3.0) -> Callable:
+    """``(W − I)·tree`` for the ring, W-free via jnp.roll (single-process)."""
+    nb = (1.0 - self_weight) / 2.0
+
+    def apply(tree):
+        return jax.tree.map(
+            lambda h: (nb * jnp.roll(h, 1, axis=0) + nb * jnp.roll(h, -1, axis=0)
+                       - (1.0 - self_weight) * h), tree)
+
+    return apply
+
+
+def ring_wmi_local(axis_name: str, self_weight: float = 1.0 / 3.0,
+                   size: int | None = None) -> Callable:
+    """``(W − I)·tree`` for the ring inside shard_map: two ppermutes, the
+    accumulator slice stays shard-local (one node per shard of ``axis_name``)."""
+    nb = (1.0 - self_weight) / 2.0
+
+    def apply(tree):
+        n = size
+        if n is None:
+            from repro.core.tracking import _axis_size
+            n = _axis_size(axis_name)
+        to_left = [(i, (i - 1) % n) for i in range(n)]
+        to_right = [(i, (i + 1) % n) for i in range(n)]
+
+        def leaf(h):
+            from_right = jax.lax.ppermute(h, axis_name, to_left)
+            from_left = jax.lax.ppermute(h, axis_name, to_right)
+            return nb * from_left + nb * from_right - (1.0 - self_weight) * h
+
+        return jax.tree.map(leaf, tree)
+
+    return apply
+
+
 class ErrorFeedbackMix:
     """EF21-style stateful compressed gossip (Richtárik et al., 2021).
 
@@ -110,25 +179,34 @@ class ErrorFeedbackMix:
     innovation shrinks, ``h → A`` and the mix approaches the exact ``W·A`` —
     aggressive ratios stop biasing the fixed point.
 
-    The engine threads the per-call-site accumulators through its scan carry
-    via :meth:`bind`; a direct ``__call__`` is the stateless ``h ≡ 0`` special
-    case (identical to plain ``compressed_mix``), used for the t=0 init.
+    The ``(W − I)·h`` product defaults to the dense einsum with ``W``; pass
+    ``wmi`` (e.g. :func:`ring_wmi_local`) to run it shard-local under the
+    engine's ``ring_local`` shard_map backend, where a K×K contraction cannot
+    act across shards. The engine threads the per-call-site accumulators
+    through its scan carry via :meth:`bind` / :meth:`state0`; a direct
+    ``__call__`` is the stateless ``h ≡ 0`` special case (identical to plain
+    ``compressed_mix``), used for the t=0 init.
     """
 
     stateful = True
 
-    def __init__(self, W, compressor: Callable):
-        Wn = np.asarray(W)
-        self.Wm = jnp.asarray(Wn - np.eye(Wn.shape[0]))
+    def __init__(self, W, compressor: Callable, wmi: Callable | None = None):
+        if W is None and wmi is None:
+            raise ValueError("ErrorFeedbackMix needs W or an explicit wmi")
+        self.wmi = dense_wmi(W) if wmi is None else wmi
         self.compressor = compressor
+
+    def state0(self, site_shapes, site_index: int):
+        """t=0 carry slot: a zero accumulator shaped like the mixed tree."""
+        del site_index
+        return jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype),
+                            site_shapes)
 
     def apply(self, tree, h):
         """One EF21 update: (mixed tree, updated accumulator)."""
-        c = self.compressor(tree_sub(tree, h))
-        h_new = tree_add(h, c)
-        mixed = jax.tree.map(
-            lambda a, hh: (a + jnp.tensordot(self.Wm, hh, axes=([1], [0]))
-                           ).astype(a.dtype), tree, h_new)
+        h_new = ef21_update(h, tree, self.compressor)
+        wh = self.wmi(h_new)
+        mixed = jax.tree.map(lambda a, d: (a + d).astype(a.dtype), tree, wh)
         return mixed, h_new
 
     def __call__(self, tree):

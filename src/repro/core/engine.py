@@ -13,12 +13,25 @@ trainer, benchmarks, examples) drives the same :class:`Engine`:
 * **Mix backends** — a registry of the communication primitive ``A ↦ W A``
   selected by name: ``dense`` (einsum with the K×K mixing matrix),
   ``ring_rolled`` (jnp.roll, W-free), ``ring_local`` (shard_map +
-  collective_permute; one node per mesh shard), and the compressed-gossip
-  operators ``compressed_topk`` / ``compressed_rand`` (A + (W−I)·C(A); pass
-  the keep fraction via ``mix_kwargs={'ratio': ...}`` and opt into EF21
-  error-feedback accumulators with ``mix_kwargs={'error_feedback': True}`` —
-  the engine threads the per-call-site residual state through its scan
-  carry). Callers stop hand-rolling their own mix construction.
+  collective_permute; one node per mesh shard; ``mix_kwargs=
+  {'error_feedback': True, 'ratio': r}`` runs EF21-compressed gossip with
+  shard-local accumulators), the compressed-gossip operators
+  ``compressed_topk`` / ``compressed_rand`` (A + (W−I)·C(A); keep fraction
+  via ``mix_kwargs={'ratio': ...}``, EF21 via
+  ``mix_kwargs={'error_feedback': True}``), and ``async_gossip``
+  (stale-by-τ ring gossip: double-buffered neighbor caches refreshed under a
+  per-edge drop model, ``mix_kwargs={'tau': t, 'drop_prob': p}``; τ=0 is
+  bitwise synchronous; with a mesh it exchanges via ppermute under
+  shard_map). Callers stop hand-rolling their own mix construction.
+* **Stateful-mix carry threading** — mixes that carry state between steps
+  (EF21 accumulators, async neighbor caches) declare ``stateful = True`` and
+  expose ``state0(site_shapes, site_index)`` / ``bind(states)`` /
+  ``apply(tree, state)``. The engine discovers the mix call sites of a step
+  by trace order (``eval_shape``), seeds one carry slot per site, and
+  threads the slots through its scan carry — algorithm bodies stay pure in
+  the mix operator and never see the state. Every carry leaf keeps a leading
+  node axis K, so shard-local backends shard the mix state with the same
+  ``P(axis_name)`` prefix as the algorithm state.
 * **Mesh execution** — pass ``mesh`` plus the node-axis name (``data`` for
   per-node parameter copies, ``pod`` for FSDP-inside-a-node pods, per
   ``ArchSpec.train_mode``). ``ring_local`` runs the algorithm body under
@@ -40,9 +53,16 @@ trainer, benchmarks, examples) drives the same :class:`Engine`:
   level J̃, via :func:`key_schedule`. (The seed driver reused a single key
   for both, correlating the batch and J̃ streams.)
 
-Bitwise contract (tests/test_engine.py, tests/test_trainer_engine.py): a
-fused run of T steps is bit-identical to T per-step ``step_fn`` calls under
-the same key schedule, for every algorithm and every mix backend.
+Bitwise contract (tests/test_engine.py, tests/test_trainer_engine.py,
+tests/test_async_gossip.py): a fused run of T steps is bit-identical to T
+per-step ``step_fn`` calls under the same key schedule, for every algorithm
+and every mix backend; ``async_gossip`` at τ=0 is additionally bit-identical
+to synchronous ring gossip.
+
+Module contract: algorithm bodies, mix operators, samplers marked
+``device_resident`` and everything threaded through the scan carry are pure
+JAX; the only host-side code is the chunk loop in :meth:`Engine.run` (result
+recording, ``on_eval`` hooks, host-sampler pre-stacking).
 """
 from __future__ import annotations
 
@@ -215,8 +235,18 @@ def _ring_rolled_backend(*, weights=None, K: int | None = None,
 @register_mix_backend("ring_local")
 def _ring_local_backend(*, weights=None, K: int | None = None,
                         self_weight: float = 1.0 / 3.0,
-                        axis_name: str = "data"):
-    """Per-shard ring via collective_permute; requires shard_map execution."""
+                        axis_name: str = "data", error_feedback: bool = False,
+                        ratio: float = 1.0):
+    """Per-shard ring via collective_permute; requires shard_map execution.
+    ``error_feedback=True`` (+ ``ratio``) runs EF21-compressed gossip with the
+    accumulators living shard-local (``ring_wmi_local`` — no K×K contraction
+    ever crosses a shard)."""
+    if error_feedback:
+        from repro.core.compression import (ErrorFeedbackMix, ring_wmi_local,
+                                            topk_sparsify)
+        return ErrorFeedbackMix(None, topk_sparsify(ratio),
+                                wmi=ring_wmi_local(axis_name, self_weight,
+                                                   size=K))
     return ring_mix_local(axis_name, self_weight, size=K)
 
 
@@ -263,12 +293,45 @@ def _compressed_rand_backend(*, weights=None, K: int | None = None,
             else compressed_mix(W, comp))
 
 
+@register_mix_backend("async_gossip")
+def _async_gossip_backend(*, weights=None, K: int | None = None,
+                          self_weight: float = 1.0 / 3.0,
+                          axis_name: str = "data", tau: int = 0,
+                          drop_prob=0.0, seed: int = 0,
+                          error_feedback: bool = False, ratio: float = 1.0,
+                          local: bool = False):
+    """Asynchronous stale-by-τ ring gossip (double-buffered neighbor caches
+    in the scan carry; per-edge Bernoulli drop model). ``tau=0`` reproduces
+    synchronous ring gossip bitwise. ``error_feedback=True`` (+ ``ratio``)
+    EF21-compresses the delivered payloads against the caches. ``local=True``
+    exchanges via ppermute under shard_map (the Engine sets it automatically
+    when built with a mesh). Ring-only: a non-ring ``weights`` (e.g. from an
+    erdos/star Topology) is rejected rather than silently remixed on a ring."""
+    import numpy as np
+
+    from repro.core.async_gossip import AsyncGossipMix
+    from repro.core.compression import topk_sparsify
+    from repro.core.topology import ring as ring_topo
+    if K is None:
+        raise ValueError("async_gossip needs `K` (or a Topology)")
+    if weights is not None and not np.allclose(
+            np.asarray(weights), ring_topo(K, self_weight).weights):
+        raise ValueError(
+            "async_gossip only implements the ring topology; got a non-ring "
+            f"mixing matrix for K={K} (self_weight={self_weight})")
+    comp = topk_sparsify(ratio) if error_feedback else None
+    return AsyncGossipMix(K, self_weight=self_weight, tau=tau,
+                          drop_prob=drop_prob, seed=seed, compressor=comp,
+                          axis_name=axis_name, local=local)
+
+
 def make_mix(name: str, **kwargs) -> MixFn:
     """Build a mixing operator from the backend registry.
 
     kwargs: weights (dense / compressed_*), K (default-ring fallback),
-    self_weight, axis_name (ring_local), ratio / seed / error_feedback
-    (compressed_*).
+    self_weight, axis_name (ring_local / async_gossip), ratio / seed /
+    error_feedback (compressed_* / async_gossip), tau / drop_prob / local
+    (async_gossip).
     """
     try:
         builder = MIX_BACKENDS[name]
@@ -360,19 +423,24 @@ class Engine:
             raise ValueError(f"unknown algo {algo!r}; have {sorted(ALGORITHMS)}")
         if dispatch not in ("fused", "per_step"):
             raise ValueError(f"dispatch must be fused|per_step, got {dispatch!r}")
-        if mix == "ring_local" and mesh is None:
-            raise ValueError("mix='ring_local' runs under shard_map and "
-                             "needs a mesh with axis `axis_name` of size K")
         self.problem, self.cfg, self.hp = problem, cfg, hp
         self.algo, self.mix_name, self.dispatch = algo, mix, dispatch
         self.axis_name, self.mesh = axis_name, mesh
+        mk = dict(mix_kwargs or {})
+        if mix == "async_gossip" and mesh is not None:
+            mk.setdefault("local", True)  # ppermute exchange, one node/shard
         self.mix = make_mix(mix, weights=weights, K=self.K,
                             self_weight=self_weight, axis_name=axis_name,
-                            **(mix_kwargs or {}))
+                            **mk)
         self._mix_stateful = bool(getattr(self.mix, "stateful", False))
-        if self._mix_stateful and mix == "ring_local":
-            raise ValueError("stateful (error-feedback) mixes are not "
-                             "supported under the shard_map backend")
+        # shard-local backends run the algorithm body under shard_map; their
+        # carry state (EF accumulators, async neighbor caches) all carries a
+        # leading node axis, so the P(axis_name) prefix shards it too.
+        self._shard_local = (mix == "ring_local"
+                             or bool(getattr(self.mix, "shard_local", False)))
+        if self._shard_local and mesh is None:
+            raise ValueError(f"mix={mix!r} runs under shard_map and needs a "
+                             f"mesh with axis `axis_name` of size K")
         alg = ALGORITHMS[algo]
         self._init_body = partial(alg.init, problem, cfg, hp, self.mix)
         self._step_nomix = partial(alg.step, problem, cfg, hp)
@@ -402,8 +470,11 @@ class Engine:
         return carry[0] if self._mix_stateful else carry
 
     def _mix_state0(self, state, batch, nkeys):
-        """Zero EF accumulators, one per mix call site of a step (shapes
-        discovered with eval_shape — trace order is deterministic)."""
+        """Initial mix-carry slots, one per mix call site of a step (shapes
+        discovered with eval_shape — trace order is deterministic). The mix's
+        ``state0(site_shapes, site_index)`` builds each slot (EF: a zero
+        accumulator; async gossip: zero caches + ages + drop keys); mixes
+        without one get zeros shaped like the mixed tree."""
         sites: list = []
 
         def probe(tree):
@@ -413,14 +484,20 @@ class Engine:
 
         jax.eval_shape(lambda s, b, k: self._step_nomix(probe, s, b, k),
                        state, batch, nkeys)
+        make0 = getattr(self.mix, "state0", None)
+        if make0 is not None:
+            return tuple(make0(t, i) for i, t in enumerate(sites))
         return tuple(jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype), t)
                      for t in sites)
 
     # -- building blocks ----------------------------------------------------
 
     def _sharded(self, fn, n_in: int):
-        """Wrap an algorithm body in shard_map for the ring_local backend."""
-        if self.mix_name != "ring_local":
+        """Wrap an algorithm body in shard_map for shard-local backends
+        (ring_local, async_gossip-with-mesh). The single spec is a tree
+        prefix, so it also shards stateful-mix carry tuples — every carry
+        leaf has a leading node axis."""
+        if not self._shard_local:
             return fn
         spec = P(self.axis_name)
         return shard_map_compat(fn, self.mesh, (spec,) * n_in, spec)
@@ -470,14 +547,12 @@ class Engine:
         """
         K = self.K
 
-        if self.mix_name == "ring_local":
-            step = self._step_body
-
-            def chunk(state, batches, nkeys):
-                def body(s, x):
+        if self._shard_local:
+            def chunk(carry, batches, nkeys):
+                def body(c, x):
                     b, nk = x
-                    return step(s, b, nk), None
-                return jax.lax.scan(body, state, (batches, nkeys))[0]
+                    return self._carry_step(c, b, nk), None
+                return jax.lax.scan(body, carry, (batches, nkeys))[0]
 
             spec, tspec = P(self.axis_name), P(None, self.axis_name)
             chunk = shard_map_compat(chunk, self.mesh,
@@ -564,7 +639,7 @@ class Engine:
                  if self._mix_stateful else state)
         kbs, kns = key_schedule(key, steps)
 
-        in_scan = self.dispatch == "fused" and self.mix_name != "ring_local"
+        in_scan = self.dispatch == "fused" and not self._shard_local
         res = RunResult(self.algo, [], [], [], [], [], {})
         t0 = time.perf_counter()
 
@@ -602,7 +677,7 @@ class Engine:
             while t < steps:
                 n = min(eval_every, steps - t)
                 kb_c, kn_c = kbs[t:t + n], kns[t:t + n]
-                if self.mix_name == "ring_local":
+                if self._shard_local:
                     xs = self._stack_batches(sample_batch, kb_c, host)
                     nk = jax.vmap(lambda k: jax.random.split(k, K))(kn_c)
                     carry, trace = chunk(carry, xs, nk), None

@@ -1,8 +1,17 @@
-"""Communication topologies (Assumption 1 of the paper).
+"""Communication topologies (Assumption 1 of the paper) + edge-delay models.
 
 The network of K participants is described by a symmetric doubly-stochastic
 mixing matrix ``W`` with eigenvalues ``1 = |λ1| > |λ2| >= ... >= |λK|``.
 The spectral gap ``1 - λ`` (λ = |λ2|) controls every rate in the paper.
+
+:class:`EdgeDelayModel` extends the static picture with per-directed-edge
+communication *delays* for wall-clock simulation (host-side numpy; nothing
+here runs on device): synchronous gossip pays ``compute + max over edges``
+per round, asynchronous stale-by-τ gossip (``core.async_gossip``) pays
+``compute + deadline`` and converts the tail of the delay distribution into
+the per-edge drop probability :meth:`EdgeDelayModel.drop_prob` — the bridge
+``benchmarks/async_bench.py`` uses to bench iteration-rate guarantees on
+simulated wall-clock time.
 """
 from __future__ import annotations
 
@@ -112,6 +121,69 @@ def erdos_renyi(K: int, p: float = 0.5, seed: int = 0) -> Topology:
         topo = _from_adjacency(f"erdos{K}", adj)
         if K == 1 or topo.lam < 1.0 - 1e-9:  # connected
             return topo
+
+
+@dataclasses.dataclass(frozen=True)
+class EdgeDelayModel:
+    """Per-directed-edge communication delay for wall-clock simulation.
+
+    Each round, edge ``e`` takes
+
+        delay_e = base_s[e] + Exp(straggler_scale_s[e])   w.p. straggler_prob[e]
+        delay_e = base_s[e]                               otherwise
+
+    All three parameters broadcast over the directed-edge axis, so
+    heterogeneous links (e.g. every edge into one slow node) get their own
+    statistics. Host-side numpy only — the device never sees delays; the
+    async mix backend consumes them reduced to :meth:`drop_prob`.
+    """
+
+    base_s: float | np.ndarray = 1e-3
+    straggler_prob: float | np.ndarray = 0.0
+    straggler_scale_s: float | np.ndarray = 0.0
+
+    def sample(self, rng: np.random.Generator, n_edges: int,
+               rounds: int = 1) -> np.ndarray:
+        """(rounds, n_edges) sampled per-edge delays."""
+        base = np.broadcast_to(np.asarray(self.base_s, float), (n_edges,))
+        p = np.broadcast_to(np.asarray(self.straggler_prob, float), (n_edges,))
+        scale = np.broadcast_to(
+            np.asarray(self.straggler_scale_s, float), (n_edges,))
+        straggle = rng.random((rounds, n_edges)) < p
+        extra = np.where(scale > 0,
+                         rng.exponential(1.0, (rounds, n_edges)) * scale, 0.0)
+        return base + straggle * extra
+
+    def sync_round_s(self, rng: np.random.Generator, n_edges: int,
+                     rounds: int = 1) -> np.ndarray:
+        """(rounds,) synchronous-gossip comm cost: every node barriers on its
+        in-edges, and gradient tracking chains rounds, so a round completes
+        when the *slowest edge anywhere* lands — max over the edge axis."""
+        return self.sample(rng, n_edges, rounds).max(axis=1)
+
+    def drop_prob(self, deadline_s: float, n_edges: int) -> np.ndarray:
+        """(n_edges,) P(delay > deadline) — the async mix's per-edge drop
+        probability when delivery is cut off at ``deadline_s``."""
+        base = np.broadcast_to(np.asarray(self.base_s, float), (n_edges,))
+        p = np.broadcast_to(np.asarray(self.straggler_prob, float), (n_edges,))
+        scale = np.broadcast_to(
+            np.asarray(self.straggler_scale_s, float), (n_edges,))
+        slack = deadline_s - base
+        # exponent masked to 0 where slack < 0 — the outer where discards
+        # that branch, but an unmasked exp would overflow-warn at scale=0
+        tail = np.where(scale > 0,
+                        np.exp(-np.maximum(slack, 0.0)
+                               / np.maximum(scale, 1e-300)), 0.0)
+        return np.where(slack < 0, 1.0, p * tail)
+
+
+def ring_edge_drop_probs(model: EdgeDelayModel, K: int,
+                         deadline_s: float) -> np.ndarray:
+    """(K, 2) drop probabilities for the ring's directed in-edges, in the
+    (left in-edge, right in-edge) column order ``AsyncGossipMix`` expects.
+    Edge ordering: edges 0..K−1 are the left in-edges (node i−1 → i), edges
+    K..2K−1 the right in-edges (node i+1 → i)."""
+    return model.drop_prob(deadline_s, 2 * K).reshape(2, K).T
 
 
 REGISTRY: dict[str, Callable[[int], Topology]] = {

@@ -6,6 +6,11 @@ a PRNG key, so :func:`make_device_lm_sampler` returns a
 :class:`repro.core.engine.DeviceSampler` the engine samples *inside* its
 scan-fused chunks: an entire ``eval_every`` LM interval is one device
 program with zero host round-trips.
+
+Module contract: everything here is pure JAX (key in, batch out — no numpy
+RNG, no Python state, nothing host-side), which is exactly what makes the
+samplers traceable into the scan; nothing from this module lives in the
+scan carry.
 """
 from __future__ import annotations
 

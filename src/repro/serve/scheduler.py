@@ -16,6 +16,10 @@ The scheduler never touches device state. The engine drives it:
 chunk -> ``record_decode()`` with the emitted token grid -> repeat until
 ``has_work()`` is false. Requests can therefore be admitted *mid-decode* the
 moment any slot frees up, which is the whole point of continuous batching.
+
+Module contract: pure host-side Python/numpy — no JAX, no device arrays, no
+jit; all device state (slot caches, in-scan masking) lives in
+``repro.serve.batch`` / ``repro.serve.steps``, and nothing here is traced.
 """
 from __future__ import annotations
 

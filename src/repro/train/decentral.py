@@ -50,7 +50,8 @@ __all__ = ["TrainerConfig", "lm_batch_extras", "make_mix", "make_node_batch",
 class TrainerConfig:
     algo: str = "mdbo"            # mdbo | vrdbo | gt_sgd
     J: int = 2                    # Neumann terms at LM scale (logreg uses 10)
-    mix: str = "dense"            # engine mix backend; 'ring' = ring_rolled
+    mix: str = "dense"            # engine mix backend ('ring' = ring_rolled;
+                                  # 'async_gossip' for stale-by-τ gossip)
     hp: HParams = dataclasses.field(default_factory=lambda: HParams(
         eta=0.1, alpha1=1.0, alpha2=1.0, beta1=0.05, beta2=0.5))
 
@@ -98,7 +99,11 @@ def make_trainer_engine(model_cfg: ModelConfig, tc: TrainerConfig, K: int, *,
     :func:`node_axis_name`) and the gossip runs as the shard_map
     ``ring_local`` backend, one node per mesh shard; the dense/rolled ring
     backends are mapped onto it automatically since they cannot act across
-    shards from inside a shard.
+    shards from inside a shard. ``mix='async_gossip'`` (stale-by-τ gossip,
+    ``mix_kwargs={'tau': t, 'drop_prob': p}``) passes through unchanged —
+    the Engine switches its exchange to ppermute-under-shard_map when a mesh
+    is present, and ``mix_kwargs={'error_feedback': True, 'ratio': r}`` on
+    ``ring_local`` runs EF21 with shard-local accumulators.
     """
     problem, hcfg = make_problem(model_cfg, tc)
     name = mix or _mix_name(tc)

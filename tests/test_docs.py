@@ -1,0 +1,41 @@
+"""The docs suite stays healthy: links resolve, snippets execute.
+
+Thin wrappers over ``tools/check_docs.py`` (the same entry point the CI
+``docs`` job runs): the link check is fast and always on; full snippet
+execution (each ```python block in a fresh subprocess) carries the ``slow``
+marker.
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+CHECKER = os.path.join(ROOT, "tools", "check_docs.py")
+
+
+def _run(*args):
+    return subprocess.run([sys.executable, CHECKER, *args],
+                          capture_output=True, text=True, cwd=ROOT,
+                          timeout=900)
+
+
+def test_docs_links_resolve():
+    r = _run("--no-run")
+    assert r.returncode == 0, r.stdout + r.stderr
+
+
+def test_docs_exist_and_are_linked_from_readme():
+    with open(os.path.join(ROOT, "README.md")) as f:
+        readme = f.read()
+    for page in ("architecture", "algorithms", "serving"):
+        path = os.path.join(ROOT, "docs", f"{page}.md")
+        assert os.path.exists(path), f"missing docs/{page}.md"
+        assert f"docs/{page}.md" in readme, f"README does not link {page}.md"
+
+
+@pytest.mark.slow
+def test_docs_snippets_execute():
+    r = _run()
+    assert r.returncode == 0, r.stdout + r.stderr

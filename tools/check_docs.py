@@ -1,0 +1,133 @@
+#!/usr/bin/env python
+"""Docs checker: every intra-repo link resolves, every snippet runs.
+
+Scans README.md and docs/*.md for
+
+* **dead links** — markdown links/images whose target is a repo path
+  (anything that is not http(s)/mailto or a pure #anchor) must exist on
+  disk, resolved relative to the file that links it;
+* **runnable snippets** — every fenced code block whose info string is
+  exactly ``python`` is executed in a fresh subprocess with
+  ``PYTHONPATH=src`` from the repo root and must exit 0. Blocks tagged
+  ``text``/``bash``/``python no-run`` are skipped, so illustrative
+  fragments stay checkable-by-eye only.
+
+Exit code 0 = docs are green (the CI `docs` job and tests/test_docs.py both
+call this).
+
+  python tools/check_docs.py [--no-run] [files...]
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+FENCE_RE = re.compile(r"^```(.*)$")
+
+
+def doc_files(extra: list[str]) -> list[str]:
+    if extra:
+        return [os.path.abspath(f) for f in extra]
+    files = [os.path.join(ROOT, "README.md")]
+    docs = os.path.join(ROOT, "docs")
+    if os.path.isdir(docs):
+        files += sorted(os.path.join(docs, f) for f in os.listdir(docs)
+                        if f.endswith(".md"))
+    return files
+
+
+def iter_snippets(text: str):
+    """(info_string, first_line_no, source) for every fenced block."""
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        m = FENCE_RE.match(lines[i].strip())
+        if m and lines[i].strip().startswith("```") and m.group(1) != "":
+            info, start, body = m.group(1).strip(), i + 1, []
+            i += 1
+            while i < len(lines) and lines[i].strip() != "```":
+                body.append(lines[i])
+                i += 1
+            yield info, start + 1, "\n".join(body)
+        i += 1
+
+
+def check_links(path: str, text: str) -> list[str]:
+    errors = []
+    # strip fenced code first so snippet sources can't register as links
+    stripped = re.sub(r"```.*?```", "", text, flags=re.S)
+    for target in LINK_RE.findall(stripped):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        rel = target.split("#")[0]
+        if not rel:  # pure anchor
+            continue
+        resolved = os.path.normpath(os.path.join(os.path.dirname(path), rel))
+        if not os.path.exists(resolved):
+            errors.append(f"{os.path.relpath(path, ROOT)}: dead link -> "
+                          f"{target}")
+    return errors
+
+
+def run_snippet(path: str, line: int, src: str) -> str | None:
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(ROOT, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    try:
+        r = subprocess.run([sys.executable, "-c", src], capture_output=True,
+                           text=True, env=env, cwd=ROOT, timeout=600)
+    except subprocess.TimeoutExpired:
+        return (f"{os.path.relpath(path, ROOT)}:{line}: snippet timed out "
+                f"(600s)")
+    if r.returncode != 0:
+        return (f"{os.path.relpath(path, ROOT)}:{line}: snippet failed "
+                f"(exit {r.returncode})\n{r.stdout[-1500:]}{r.stderr[-1500:]}")
+    return None
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*", help="default: README.md + docs/*.md")
+    ap.add_argument("--no-run", action="store_true",
+                    help="check links only, skip snippet execution")
+    args = ap.parse_args()
+
+    errors, n_links, n_snippets = [], 0, 0
+    for path in doc_files(args.files):
+        with open(path) as f:
+            text = f.read()
+        link_errors = check_links(path, text)
+        n_links += len(LINK_RE.findall(re.sub(r"```.*?```", "", text,
+                                              flags=re.S)))
+        errors += link_errors
+        for info, line, src in iter_snippets(text):
+            if info != "python":
+                continue
+            n_snippets += 1
+            if args.no_run:
+                continue
+            err = run_snippet(path, line, src)
+            print(f"  ran {os.path.relpath(path, ROOT)}:{line} "
+                  f"[{'FAIL' if err else 'ok'}]")
+            if err:
+                errors.append(err)
+
+    if errors:
+        print("\n".join(errors), file=sys.stderr)
+        print(f"\ndocs check FAILED: {len(errors)} error(s)", file=sys.stderr)
+        return 1
+    ran = "link-checked only" if args.no_run else "executed"
+    print(f"docs check OK: {n_links} links resolved, "
+          f"{n_snippets} python snippets {ran}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
