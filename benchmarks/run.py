@@ -5,21 +5,90 @@ All figure reproductions run through the scan-fused engine (core.engine);
 ``engine_bench`` and ``trainer_bench`` additionally report the fused vs
 per-step dispatch ratio (logreg and Engine-backed LM trainer respectively).
 
-  PYTHONPATH=src python -m benchmarks.run [--quick] [--all]
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--all] [--compare]
 
 ``--all`` covers every subsystem, adding the LM-trainer dispatch bench
 (``trainer_bench``) and the async-gossip wall-clock bench (``async_bench``)
 to the default figure + micro set; ``serve_bench`` is always part of the
 default set.
 
-Perf-bearing benches additionally write machine-readable
+Perf-bearing benches write machine-readable
 ``benchmarks/results/BENCH_<name>.json`` records (steps/sec, tokens/sec,
 consensus error, wall-clock curves) so the trajectory is tracked across PRs.
+``--compare`` closes that loop: the committed records are snapshotted
+*before* the benches overwrite them, and every ``tokens_per_sec`` /
+``steps_per_sec`` metric in the fresh records is diffed against its
+baseline — a drop of more than ``--compare-tol`` (default 15%) fails the
+run with exit code 1 (the CI fast job runs this gate).
 """
 from __future__ import annotations
 
 import argparse
+import glob
+import json
+import os
 import sys
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results")
+
+# the machine-independent trajectory metrics every record may carry
+PERF_KEYS = ("tokens_per_sec", "steps_per_sec")
+
+
+def load_bench_records() -> dict[str, dict]:
+    """{bench name: payload} for every committed BENCH_<name>.json."""
+    records = {}
+    for path in sorted(glob.glob(os.path.join(RESULTS, "BENCH_*.json"))):
+        name = os.path.basename(path)[len("BENCH_"):-len(".json")]
+        with open(path) as f:
+            records[name] = json.load(f)
+    return records
+
+
+def perf_metrics(payload, prefix: str = "",
+                 under_perf: bool = False) -> dict[str, float]:
+    """Flatten a record to {dotted.path: value} for every perf key.
+
+    A perf key may hold a scalar (serve: ``steady.*.tokens_per_sec``) or a
+    dict of scalars (engine/trainer: ``steps_per_sec: {fused, per_step}``) —
+    every numeric leaf at or below a perf key is collected."""
+    out: dict[str, float] = {}
+    if isinstance(payload, dict):
+        for k, v in sorted(payload.items()):
+            hit = under_perf or k in PERF_KEYS
+            if hit and isinstance(v, (int, float)) and not isinstance(v, bool):
+                out[prefix + k] = float(v)
+            elif isinstance(v, dict):
+                out.update(perf_metrics(v, f"{prefix}{k}.", hit))
+    return out
+
+
+def compare_records(baseline: dict[str, dict], fresh: dict[str, dict],
+                    tol: float) -> list[str]:
+    """Regression report: fresh perf metrics that dropped > tol vs baseline.
+
+    Metrics present only on one side are reported informationally but do not
+    fail the gate (new benches appear, old ones get renamed)."""
+    failures = []
+    for name in sorted(set(baseline) & set(fresh)):
+        base_m, new_m = perf_metrics(baseline[name]), perf_metrics(fresh[name])
+        for key in sorted(set(base_m) & set(new_m)):
+            b, n = base_m[key], new_m[key]
+            if b <= 0:
+                continue
+            ratio = n / b
+            status = "OK" if ratio >= 1.0 - tol else "REGRESSION"
+            print(f"compare {name}:{key}: baseline={b:.2f} fresh={n:.2f} "
+                  f"({ratio:.2f}x) {status}")
+            if status == "REGRESSION":
+                failures.append(f"{name}:{key} {b:.2f} -> {n:.2f} "
+                                f"({ratio:.2f}x < {1.0 - tol:.2f}x)")
+        for key in sorted(set(base_m) - set(new_m)):
+            print(f"compare {name}:{key}: dropped from fresh record "
+                  f"(baseline={base_m[key]:.2f})")
+        for key in sorted(set(new_m) - set(base_m)):
+            print(f"compare {name}:{key}: new metric ({new_m[key]:.2f})")
+    return failures
 
 
 def main() -> None:
@@ -28,8 +97,16 @@ def main() -> None:
                     help="fewer steps (CI-scale)")
     ap.add_argument("--all", action="store_true",
                     help="every registered bench incl. the LM trainer")
+    ap.add_argument("--compare", action="store_true",
+                    help="diff fresh BENCH_*.json records against the "
+                         "committed baselines; exit 1 on perf regression")
+    ap.add_argument("--compare-tol", type=float, default=0.15,
+                    help="fractional tokens/steps-per-sec drop that fails "
+                         "the --compare gate (default 0.15)")
     args = ap.parse_args()
     steps = 30 if args.quick else 60
+
+    baseline = load_bench_records() if args.compare else {}
 
     from benchmarks import (async_bench, engine_bench, fig1_loss_curves,
                             fig2_accuracy, fig3_speedup, fig_compression,
@@ -60,6 +137,17 @@ def main() -> None:
     for r in rows:
         sps = r.get("steps_per_sec", "")
         print(f"{r['name']},{r['us_per_call']},{sps},\"{r['derived']}\"")
+
+    if args.compare:
+        failures = compare_records(baseline, load_bench_records(),
+                                   args.compare_tol)
+        if failures:
+            print(f"\nbench compare FAILED ({len(failures)} regression(s) "
+                  f"beyond {args.compare_tol:.0%}):", file=sys.stderr)
+            for f in failures:
+                print(f"  {f}", file=sys.stderr)
+            sys.exit(1)
+        print(f"\nbench compare OK (tolerance {args.compare_tol:.0%})")
 
 
 if __name__ == '__main__':

@@ -1,19 +1,29 @@
-"""Continuous batching vs cohort drain on a mixed-length serving workload.
+"""Paged KV vs continuous batching vs cohort drain on a mixed-length serving
+workload, at EQUAL physical KV memory.
 
-The workload is the adversarial case for cohort scheduling: prompts of mixed
-length and *varied* ``max_new_tokens`` budgets. The cohort engine drains the
-queue in fixed groups, so every short request's slot idles (or burns masked
-decode steps) until the group's longest request finishes, and no new request
-can start until the whole cohort drains. The slot scheduler refills finished
-slots at every ``decode_chunk`` boundary instead.
+The workload is the adversarial case for uniform reservations: prompts of
+mixed length and *varied* ``max_new_tokens`` budgets. The cohort engine
+drains the queue in fixed groups (every short request idles until the
+group's longest finishes); the continuous engine refills finished slots at
+chunk boundaries but still reserves a worst-case ``capacity``-long dense KV
+slice per slot, so slot count — not HBM actually holding tokens — caps
+concurrency. The paged engine maps each request's tokens onto fixed-size
+blocks through a block table, so admission is bounded by blocks in use.
+
+All three engines get the SAME physical KV budget:
+``max_batch x capacity`` dense positions for cohort/continuous ==
+``num_blocks x block_size`` pooled positions for paged (the paged engine
+additionally holds one trash block that absorbs masked writes from dead
+slots). Paged gets more decode *lanes* (``paged_lanes``) — lanes are
+program width, not KV memory — and the bench reports how many concurrent
+requests each mode actually admits at that equal budget
+(``peak_concurrency``), alongside wall-clock tokens/sec, mean/p95 latency,
+and decode-dispatch counts.
 
 Measured in steady state (a long-running server with warm jit caches): the
 first drain of the workload on each engine warms every program shape, the
 second drain is timed. A separate cold-start row shows what prompt-length
 bucketing (``prefill_bucket=True``) buys when nothing is compiled yet.
-
-Reports per engine: wall-clock tokens/sec, mean/p95 per-request latency
-(submit -> finish), and decode-dispatch counts (the scan-fusion win).
 
   PYTHONPATH=src python benchmarks/serve_bench.py
 """
@@ -57,11 +67,24 @@ def drain(eng, workload):
 
 
 def main(n_requests: int = 18, max_batch: int = 4, decode_chunk: int = 8,
-         capacity: int = 64, arch: str = "smollm-360m", seed: int = 0):
+         capacity: int = 64, block_size: int = 8, paged_lanes: int = 16,
+         arch: str = "smollm-360m", seed: int = 0):
     cfg = get(arch).reduced()
     params = init_params(cfg, jax.random.PRNGKey(0))
     workload = make_workload(np.random.default_rng(seed), n_requests,
                              cfg.vocab)
+    # equal physical KV budget across every mode (see module docstring)
+    kv_positions = max_batch * capacity
+    num_blocks = kv_positions // block_size
+
+    def make(mode, **kw):
+        if mode == "paged":
+            kw.update(max_batch=paged_lanes, block_size=block_size,
+                      num_blocks=num_blocks)
+        else:
+            kw.update(max_batch=max_batch)
+        return ServeEngine(cfg, params, capacity=capacity, mode=mode,
+                           decode_chunk=decode_chunk, **kw)
 
     def row(name, r):
         return {
@@ -71,14 +94,13 @@ def main(n_requests: int = 18, max_batch: int = 4, decode_chunk: int = 8,
                         f"lat_mean_s={r['lat_mean_s']:.3f};"
                         f"lat_p95_s={r['lat_p95_s']:.3f};"
                         f"decode_dispatches={r['decode_dispatches']};"
+                        f"concurrency={r['peak_concurrency']};"
                         f"tokens={r['tokens']}"),
         }
 
     rows, warm = [], {}
-    for mode in ("cohort", "continuous"):
-        eng = ServeEngine(cfg, params, capacity=capacity,
-                          max_batch=max_batch, mode=mode,
-                          decode_chunk=decode_chunk)
+    for mode in ("cohort", "continuous", "paged"):
+        eng = make(mode)
         cold = drain(eng, workload)       # compiles every program shape
         warm[mode] = drain(eng, workload)  # steady state
         rows.append(row(f"{mode}/cold", cold))
@@ -86,32 +108,49 @@ def main(n_requests: int = 18, max_batch: int = 4, decode_chunk: int = 8,
 
     # cold-start mitigation: power-of-two prompt buckets compile O(log S)
     # prefill programs instead of one per distinct prompt length
-    eng = ServeEngine(cfg, params, capacity=capacity, max_batch=max_batch,
-                      mode="continuous", decode_chunk=decode_chunk,
-                      prefill_bucket=True)
+    eng = make("continuous", prefill_bucket=True)
     rows.append(row("continuous+bucket/cold", drain(eng, workload)))
 
     speedup = warm["continuous"]["tok_s"] / warm["cohort"]["tok_s"]
+    conc = {m: warm[m]["peak_concurrency"] for m in warm}
+    conc_gain = conc["paged"] / max(conc["continuous"], 1)
     write_bench_json("serve", {
         "workload": {"arch": arch, "n_requests": n_requests,
-                     "max_batch": max_batch, "decode_chunk": decode_chunk},
+                     "max_batch": max_batch, "decode_chunk": decode_chunk,
+                     "capacity": capacity, "block_size": block_size,
+                     "paged_lanes": paged_lanes,
+                     "kv_positions_all_modes": kv_positions},
         "steady": {mode: {
             "tokens_per_sec": float(warm[mode]["tok_s"]),
             "lat_mean_s": warm[mode]["lat_mean_s"],
             "lat_p95_s": warm[mode]["lat_p95_s"],
             "decode_dispatches": warm[mode]["decode_dispatches"],
+            "admitted_concurrency": conc[mode],
+            **({"preemptions": warm[mode]["preemptions"]}
+               if mode == "paged" else {}),
         } for mode in warm},
         "continuous_vs_cohort_tok_s": float(speedup),
+        "paged_vs_continuous_tok_s":
+            float(warm["paged"]["tok_s"] / warm["continuous"]["tok_s"]),
+        "paged_vs_continuous_concurrency": float(conc_gain),
     })
     rows.append({
         "name": f"serve/{arch}/continuous_vs_cohort",
         "us_per_call": 0.0,
         "derived": f"steady_tok_s_speedup={speedup:.2f}x",
     })
+    rows.append({
+        "name": f"serve/{arch}/paged_vs_continuous",
+        "us_per_call": 0.0,
+        "derived": (f"admitted_concurrency={conc['paged']}v"
+                    f"{conc['continuous']} ({conc_gain:.2f}x at equal KV "
+                    f"HBM);preemptions={warm['paged']['preemptions']}"),
+    })
     # note: streams are NOT compared across modes here — the cohort engine
     # left-pads mixed-length prompts into one prefill (pad tokens influence
-    # attention), while continuous prefills each prompt at its exact length.
-    # The serial-equivalence contract lives in tests/test_scheduler.py.
+    # attention), while continuous/paged prefill each prompt at its exact
+    # length. The serial-equivalence contracts live in
+    # tests/test_scheduler.py and tests/test_paged.py.
     return rows
 
 

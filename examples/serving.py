@@ -5,6 +5,9 @@ slots are refilled while long ones keep decoding.
 
   PYTHONPATH=src python examples/serving.py --arch rwkv6-1.6b --requests 6
   PYTHONPATH=src python examples/serving.py --mode cohort   # legacy baseline
+  # paged KV (block-table indirection; full-attention KV families) + stream
+  PYTHONPATH=src python examples/serving.py --arch smollm-360m --mode paged \
+      --stream
 """
 import argparse
 import time
@@ -22,8 +25,11 @@ def main():
     ap.add_argument("--arch", default="recurrentgemma-2b")
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--max-new", type=int, default=8)
-    ap.add_argument("--mode", choices=("continuous", "cohort"),
+    ap.add_argument("--mode", choices=("continuous", "cohort", "paged"),
                     default="continuous")
+    ap.add_argument("--stream", action="store_true",
+                    help="print per-request token deltas as they arrive "
+                         "(ServeEngine.stream) instead of draining to a dict")
     args = ap.parse_args()
 
     cfg = get(args.arch).reduced()
@@ -31,7 +37,7 @@ def main():
     print(f"{cfg.name} (reduced: {param_count(params):,} params, "
           f"family={cfg.family}, mode={args.mode})")
     engine = ServeEngine(cfg, params, capacity=64, max_batch=4,
-                         mode=args.mode, decode_chunk=4)
+                         mode=args.mode, decode_chunk=4, block_size=8)
 
     # mixed-length workload: short and long prompts, varied token budgets —
     # the case where continuous batching wins (a cohort would idle every
@@ -42,7 +48,14 @@ def main():
         budget = int(rng.integers(2, args.max_new + 1))
         engine.submit(prompt, max_new_tokens=budget)
     t0 = time.time()
-    results = engine.run()
+    if args.stream:
+        results = {}
+        for rid, delta, done in engine.stream():
+            print(f"  [stream] request {rid} += {delta}"
+                  + (" (done)" if done else ""))
+            results.setdefault(rid, []).extend(delta)
+    else:
+        results = engine.run()
     dt = time.time() - t0
     for rid, toks in sorted(results.items()):
         print(f"  request {rid}: {toks}")

@@ -161,6 +161,31 @@ class EdgeDelayModel:
         when the *slowest edge anywhere* lands — max over the edge axis."""
         return self.sample(rng, n_edges, rounds).max(axis=1)
 
+    def adaptive_deadline(self, quantile: float, observed=None, *,
+                          n_edges: int | None = None, rounds: int = 256,
+                          rng: np.random.Generator | None = None) -> float:
+        """Pick the async-gossip comm cutoff from the observed delay tail.
+
+        Returns the ``quantile``-th quantile of per-edge delays: the deadline
+        at which roughly ``1 - quantile`` of edge deliveries miss the cutoff
+        and fall back to stale cached values. ``observed`` is any array of
+        measured delays (e.g. from a running deployment); when omitted, the
+        model samples its own ``(rounds, n_edges)`` delays — the simulation
+        stand-in for observing a real network. A fixed deadline must be
+        hand-tuned per delay distribution; the adaptive one keeps the
+        drop-rate (and therefore the staleness/iteration-rate trade) pinned
+        as the tail changes."""
+        if not 0.0 < quantile < 1.0:
+            raise ValueError(f"quantile must be in (0, 1), got {quantile}")
+        if observed is None:
+            if n_edges is None:
+                raise ValueError("need n_edges to sample when no observed "
+                                 "delays are given")
+            rng = np.random.default_rng(0) if rng is None else rng
+            observed = self.sample(rng, n_edges, rounds)
+        return float(np.quantile(np.asarray(observed, float).ravel(),
+                                 quantile))
+
     def drop_prob(self, deadline_s: float, n_edges: int) -> np.ndarray:
         """(n_edges,) P(delay > deadline) — the async mix's per-edge drop
         probability when delivery is cut off at ``deadline_s``."""

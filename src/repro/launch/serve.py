@@ -1,10 +1,13 @@
 """CLI serving driver (smoke-scale on CPU).
 
-Continuous batching (slot scheduler + scan-fused decode) by default; the
-legacy cohort drain stays available for comparison:
+Continuous batching (slot scheduler + scan-fused decode) by default; paged
+KV (block-table indirection, full-attention KV families) and the legacy
+cohort drain stay available for comparison:
 
   python -m repro.launch.serve --arch rwkv6-1.6b --reduced --requests 6
   python -m repro.launch.serve --arch qwen2.5-3b --reduced --mode cohort
+  python -m repro.launch.serve --arch smollm-360m --reduced --mode paged \
+      --block-size 8 --num-blocks 16
 """
 from __future__ import annotations
 
@@ -27,10 +30,15 @@ def main():
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--capacity", type=int, default=64)
     ap.add_argument("--max-batch", type=int, default=4)
-    ap.add_argument("--mode", choices=("continuous", "cohort"),
+    ap.add_argument("--mode", choices=("continuous", "cohort", "paged"),
                     default="continuous")
     ap.add_argument("--decode-chunk", type=int, default=8,
-                    help="decode tokens per fused dispatch (continuous mode)")
+                    help="decode tokens per fused dispatch")
+    ap.add_argument("--block-size", type=int, default=16,
+                    help="KV positions per block (paged mode)")
+    ap.add_argument("--num-blocks", type=int, default=None,
+                    help="physical KV blocks in the pool (paged mode; "
+                         "default: max_batch*capacity/block_size)")
     args = ap.parse_args()
 
     spec = get(args.arch)
@@ -38,7 +46,8 @@ def main():
     params = init_params(cfg, jax.random.PRNGKey(0))
     eng = ServeEngine(cfg, params, capacity=args.capacity,
                       max_batch=args.max_batch, mode=args.mode,
-                      decode_chunk=args.decode_chunk)
+                      decode_chunk=args.decode_chunk,
+                      block_size=args.block_size, num_blocks=args.num_blocks)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, size=rng.integers(3, 10))

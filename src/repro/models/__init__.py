@@ -1,8 +1,10 @@
 """repro.models — composable model definitions for all assigned architectures."""
 from repro.models.config import ModelConfig
-from repro.models.transformer import (cache_batch_axes, decode_step, forward,
-                                      init_cache, init_params, loss_fn,
-                                      param_count, prefill)
+from repro.models.transformer import (cache_batch_axes, cache_capacity_axes,
+                                      decode_step, forward, init_cache,
+                                      init_params, loss_fn, param_count,
+                                      prefill)
 
-__all__ = ["ModelConfig", "cache_batch_axes", "decode_step", "forward",
-           "init_cache", "init_params", "loss_fn", "param_count", "prefill"]
+__all__ = ["ModelConfig", "cache_batch_axes", "cache_capacity_axes",
+           "decode_step", "forward", "init_cache", "init_params", "loss_fn",
+           "param_count", "prefill"]

@@ -543,6 +543,38 @@ def cache_batch_axes(cfg: ModelConfig, capacity: int, *, params=None,
     return jax.tree.map(axis, s1, s2)
 
 
+def cache_capacity_axes(cfg: ModelConfig, capacity: int, *, params=None,
+                        src_len: int | None = None) -> Params:
+    """Pytree (same structure as :func:`init_cache`'s output) giving the
+    *capacity*-axis index of every cache leaf, with ``-1`` for leaves that do
+    not grow with the KV capacity (``idx``, recurrent state, cross-attention
+    caches, ring-windowed KV once the window saturates).
+
+    The paged serving layer (``repro.serve.batch.BlockPool``) combines this
+    with :func:`cache_batch_axes` to split exactly the per-token leaves into
+    fixed-size blocks. Discovered the same way as the batch axes: abstract-eval
+    ``init_cache`` at two capacities and diff the leaf shapes."""
+    def build(cap):
+        def f(p, src):
+            return init_cache(cfg, 1, cap, src_embeds=src, params=p)
+        src = None
+        if cfg.family == "audio":
+            src = jax.ShapeDtypeStruct(
+                (1, src_len or cfg.src_len, cfg.d_model), cfg.dtype)
+        return jax.eval_shape(f, params, src)
+
+    s1, s2 = build(capacity), build(2 * capacity)
+
+    def axis(a, b):
+        diff = [i for i, (x, y) in enumerate(zip(a.shape, b.shape)) if x != y]
+        if not diff:
+            return -1
+        assert len(diff) == 1, (a.shape, b.shape)
+        return diff[0]
+
+    return jax.tree.map(axis, s1, s2)
+
+
 def decode_step(cfg: ModelConfig, params: Params, tokens, cache):
     """tokens [B, 1] -> (logits [B, 1, V], new cache). cache['idx'] is the
     absolute position of this token."""

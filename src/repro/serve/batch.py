@@ -1,26 +1,40 @@
-"""Slotted KV-cache operations for continuous batching.
+"""KV-cache block layer: slotted ops for continuous batching and the paged
+block-table indirection used by ``mode="paged"``.
 
-The continuous-batching engine keeps ONE batched decode cache whose batch
-dimension is ``max_batch`` *slots*. Each slot holds an independent request at
-its own absolute position, so the scalar ``cache['idx']`` of the single-stream
-layout becomes a per-slot ``[B]`` vector here ("slot layout"). The ops:
+Two cache layouts live here:
 
-* :func:`init_slot_cache` — empty slot-layout cache for ``max_batch`` slots;
-* :func:`write_slot`      — insert a freshly prefilled single-request cache
-  into slot *i* (mid-decode admission);
-* :func:`gather_slot`     — extract slot *i* back to a single-request cache
-  (debug / equivalence testing).
+* **Slot layout** (``mode="continuous"``) — ONE batched decode cache whose
+  batch dimension is ``max_batch`` *slots*; every slot reserves a worst-case
+  ``capacity``-long dense KV slice. :func:`init_slot_cache`,
+  :func:`write_slot`, :func:`gather_slot` operate on it.
 
-Batch axes differ per leaf (layer-stacked leaves are [L, B, ...], hybrid
-``rem`` leaves [B, ...]); :func:`repro.models.cache_batch_axes` locates them
-so these ops stay family-agnostic.
+* **Paged layout** (``mode="paged"``) — a :class:`BlockPool` owns ONE
+  physical ``(num_blocks + 1, block_size, ...)`` cache per per-token cache
+  tensor (the ``+ 1`` is a trash block that absorbs masked writes from dead
+  slots so the device program never branches). Each slot holds a
+  ``(max_blocks,)`` int32 *block table* mapping logical pages to physical
+  blocks, so a request only ever occupies ``ceil(tokens / block_size)``
+  blocks — HBM scales with tokens actually cached, not with
+  ``max_batch × capacity``.
+
+Per-token leaves are located generically: :func:`repro.models.cache_batch_axes`
+gives each leaf's batch axis, :func:`repro.models.cache_capacity_axes` the
+axis that grows with KV capacity. Leaves without a capacity axis (recurrent
+state, cross-attention caches) cannot be paged — :class:`BlockPool` rejects
+those families up front.
+
+The device-side ops (:func:`write_prefill`, :func:`gather_pages`,
+:func:`slice_token`, :func:`scatter_token`) are pure JAX; the block
+*allocator* inside :class:`BlockPool` is host-side numpy (free list, owner
+map, per-slot tables) and is never traced.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.models import cache_batch_axes, init_cache
+from repro.models import cache_batch_axes, cache_capacity_axes, init_cache
 from repro.models.config import ModelConfig
 
 
@@ -79,3 +93,182 @@ def gather_slot(slot_cache, i, axes):
         return jax.lax.dynamic_slice_in_dim(big, i, 1, axis=ax)
 
     return unslotify(jax.tree.map(take, slot_cache, axes))
+
+
+# ---------------------------------------------------------------------------
+# Paged layout: block-table indirection
+# ---------------------------------------------------------------------------
+
+def _strip_idx(tree):
+    return {k: v for k, v in tree.items() if k != "idx"}
+
+
+def _rest_axis(b: int, c: int) -> int:
+    """Position of the capacity axis once the batch axis is squeezed out."""
+    return c - (1 if b < c else 0)
+
+
+def _to_pages(x, b: int, c: int, block_size: int):
+    """Batch-1 dense leaf -> ``[n_pages, block_size, *rest]`` pages."""
+    x = jnp.moveaxis(jnp.squeeze(x, b), _rest_axis(b, c), 0)
+    return x.reshape(x.shape[0] // block_size, block_size, *x.shape[1:])
+
+
+def write_prefill(pool_data, request_cache, table, *, batch_axes, cap_axes,
+                  block_size: int):
+    """Scatter a batch-1 prefilled request cache into its allocated blocks.
+
+    ``table``: the slot's full ``[max_blocks]`` block table (unallocated
+    entries point at the trash block, so every page has a static-shape
+    destination and pad pages land in trash)."""
+    req = _strip_idx(dict(request_cache))
+
+    def one(pool_leaf, leaf, b, c):
+        pages = _to_pages(leaf, b, c, block_size).astype(pool_leaf.dtype)
+        return pool_leaf.at[table].set(pages)
+
+    return jax.tree.map(one, pool_data, req, batch_axes, cap_axes)
+
+
+def gather_pages(pool_data, table, *, batch_axes, cap_axes):
+    """Assemble one slot's logical dense cache (batch-1 layout, no ``idx``)
+    from the physical pool through its block table. Pages mapped to trash
+    carry garbage — every read of them is masked by the decode ``kv_len``
+    rule, and masked lanes contribute exactly zero to attention."""
+    def one(pool_leaf, b, c):
+        pages = pool_leaf[table]                       # [max_blocks, bs, *r]
+        x = pages.reshape(pages.shape[0] * pages.shape[1], *pages.shape[2:])
+        return jnp.expand_dims(jnp.moveaxis(x, 0, _rest_axis(b, c)), b)
+
+    return jax.tree.map(one, pool_data, batch_axes, cap_axes)
+
+
+def slice_token(cache, pos, *, batch_axes, cap_axes):
+    """Extract the per-token values written at position ``pos`` from a
+    batch-1 dense cache: one ``[*rest]`` leaf per paged tensor (what
+    :func:`scatter_token` appends to the slot's tail block)."""
+    def one(leaf, b, c):
+        x = jnp.squeeze(leaf, b)
+        ax = _rest_axis(b, c)
+        return jnp.squeeze(jax.lax.dynamic_slice_in_dim(x, pos, 1, axis=ax),
+                           ax)
+
+    return jax.tree.map(one, _strip_idx(dict(cache)), batch_axes, cap_axes)
+
+
+def scatter_token(pool_data, writes, blk, off):
+    """Write one token's values for every slot at ``(blk[i], off[i])``.
+
+    writes: leaves ``[B, *rest]`` (from the vmapped decode step); ``blk`` is
+    already routed to the trash block for dead slots, so distinct live slots
+    always target distinct blocks."""
+    return jax.tree.map(
+        lambda p, w: p.at[blk, off].set(w.astype(p.dtype)), pool_data, writes)
+
+
+class BlockPool:
+    """Physical paged KV cache + host-side block allocator.
+
+    Device side: ``.data`` — one ``[num_blocks + 1, block_size, *rest]``
+    array per per-token cache tensor (index ``num_blocks`` is the trash
+    block). Host side: a free list, an owner map, and per-slot
+    ``[max_blocks]`` int32 block tables (``.tables``; unallocated entries
+    point at trash). Allocation is exact — a slot owns
+    ``ceil(tokens / block_size)`` blocks — and checked: double allocation or
+    foreign frees raise immediately, and after a full drain
+    ``free_blocks == num_blocks`` (the leak invariant the property tests
+    pin).
+    """
+
+    def __init__(self, cfg: ModelConfig, *, num_blocks: int, block_size: int,
+                 max_batch: int, capacity: int, params=None):
+        if capacity % block_size:
+            raise ValueError(f"capacity {capacity} must be a multiple of "
+                             f"block_size {block_size}")
+        self.cfg = cfg
+        self.num_blocks, self.block_size = num_blocks, block_size
+        self.max_batch, self.capacity = max_batch, capacity
+        self.max_blocks = capacity // block_size
+
+        axes_b = cache_batch_axes(cfg, capacity, params=params)
+        axes_c = cache_capacity_axes(cfg, capacity, params=params)
+        self.batch_axes = _strip_idx(axes_b)
+        self.cap_axes = _strip_idx(axes_c)
+        bad = [b_c for b_c in zip(jax.tree.leaves(self.batch_axes),
+                                  jax.tree.leaves(self.cap_axes))
+               if b_c[0] < 0 or b_c[1] < 0]
+        if bad or not jax.tree.leaves(self.cap_axes):
+            raise ValueError(
+                f"family {cfg.family!r} has cache leaves without a "
+                "(batch, capacity) axis pair — paged KV needs every "
+                "per-token tensor to grow with capacity")
+
+        shapes = jax.eval_shape(
+            lambda p: init_cache(cfg, 1, capacity, params=p), params)
+
+        def phys(leaf, b, c):
+            assert leaf.shape[c] == capacity, (leaf.shape, c)
+            rest = tuple(s for ax, s in enumerate(leaf.shape)
+                         if ax not in (b, c))
+            return jnp.zeros((num_blocks + 1, block_size) + rest, leaf.dtype)
+
+        self.data = jax.tree.map(phys, _strip_idx(dict(shapes)),
+                                 self.batch_axes, self.cap_axes)
+
+        # host allocator state
+        self.trash = num_blocks
+        self.tables = np.full((max_batch, self.max_blocks), self.trash,
+                              np.int32)
+        self._free: list[int] = list(range(num_blocks - 1, -1, -1))
+        self._owner = np.full(num_blocks, -1, np.int64)
+        self._count = np.zeros(max_batch, np.int64)
+
+    # -- allocator -----------------------------------------------------------
+
+    @property
+    def free_blocks(self) -> int:
+        return len(self._free)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return -(-max(int(n_tokens), 0) // self.block_size)
+
+    def can_fit(self, n_tokens: int) -> bool:
+        """Would a *fresh* slot holding ``n_tokens`` fit right now?"""
+        return self.blocks_for(n_tokens) <= self.free_blocks
+
+    def owned(self, slot: int) -> int:
+        return int(self._count[slot])
+
+    def ensure(self, slot: int, n_tokens: int) -> bool:
+        """Grow ``slot``'s table until it covers ``n_tokens`` positions.
+
+        Returns False (allocating nothing) when the free list cannot cover
+        the growth — the caller preempts and retries. Coverage is capped at
+        ``capacity`` (the table length)."""
+        need = min(self.blocks_for(n_tokens), self.max_blocks) - self.owned(slot)
+        if need <= 0:
+            return True
+        if need > self.free_blocks:
+            return False
+        for _ in range(need):
+            blk = self._free.pop()
+            if self._owner[blk] != -1:
+                raise AssertionError(
+                    f"block {blk} double-allocated (owner {self._owner[blk]})")
+            self._owner[blk] = slot
+            self.tables[slot, self._count[slot]] = blk
+            self._count[slot] += 1
+        return True
+
+    def release(self, slot: int) -> None:
+        """Free every block the slot owns and reset its table to trash."""
+        for j in range(self.owned(slot)):
+            blk = int(self.tables[slot, j])
+            if self._owner[blk] != slot:
+                raise AssertionError(
+                    f"slot {slot} freeing block {blk} owned by "
+                    f"{self._owner[blk]}")
+            self._owner[blk] = -1
+            self._free.append(blk)
+        self.tables[slot, :] = self.trash
+        self._count[slot] = 0

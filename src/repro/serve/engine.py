@@ -1,21 +1,39 @@
-"""Serving engine: slot-based continuous batching over a scan-fused decode.
+"""Serving engine: slot-based continuous batching and paged KV over a
+scan-fused decode.
 
-Two modes behind the same ``submit``/``run`` API:
+Three modes behind the same ``submit``/``run``/``stream`` API:
 
-* ``mode="continuous"`` (default) — the tentpole path. A
+* ``mode="paged"`` — the paged-KV path. A
+  :class:`~repro.serve.batch.BlockPool` owns the physical
+  ``(num_blocks, block_size, ...)`` KV cache; each request holds only the
+  blocks its tokens actually occupy, mapped through a per-slot block table.
+  Admission is gated on *free blocks* (KV HBM in use), not on slot count, so
+  a mixed-length workload admits far more concurrent requests at equal HBM
+  than the uniform-reservation modes; when a decode chunk would exhaust the
+  pool, the youngest request is preempted back to the queue front and
+  restarts later (greedy decode regenerates its stream bit-for-bit). Prefill
+  writes directly into freshly allocated blocks; decode gathers K/V through
+  the block table inside the vmapped step and appends to the tail block
+  inside the fused chunk.
+
+* ``mode="continuous"`` (default) — a
   :class:`~repro.serve.scheduler.SlotScheduler` owns ``max_batch`` decode
-  slots; each queued request is prefilled *individually* (exact prompt
-  length, batch 1) and its cache written into a free slot mid-decode
+  slots with dense worst-case ``capacity`` reservations; each queued request
+  is prefilled *individually* (exact prompt length, batch 1) and its cache
+  written into a free slot mid-decode
   (:func:`repro.serve.batch.write_slot`). Decode runs ``decode_chunk``
   tokens per device dispatch (:func:`repro.serve.steps.make_fused_decode`)
-  with in-scan EOS/budget masking, so a long request never holds a cohort
-  hostage and finished slots are refilled at the next chunk boundary.
-  Per-request streams are bitwise identical to serial one-request-at-a-time
-  greedy decode (tests/test_scheduler.py).
+  with in-scan EOS/budget masking.
 
 * ``mode="cohort"`` — the legacy fixed-cohort drain (left-padded batch
   prefill, one jit call per token), kept as the baseline that
-  ``benchmarks/serve_bench.py`` measures continuous batching against.
+  ``benchmarks/serve_bench.py`` measures the other modes against.
+
+``run()`` drains the queue to ``{rid: tokens}``; ``stream()`` is a generator
+yielding ``(rid, delta_tokens, done)`` per-request deltas at admission and at
+every chunk boundary (paged + continuous modes). Per-request streams are
+bitwise identical to serial one-request-at-a-time greedy decode in both
+modes (tests/test_scheduler.py, tests/test_paged.py).
 
 Single-process greedy sampling; the dry-run proves the sharded lowering.
 """
@@ -29,22 +47,28 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ModelConfig
-from repro.serve.batch import init_slot_cache, slot_axes, write_slot
+from repro.serve.batch import (BlockPool, init_slot_cache, slot_axes,
+                               write_prefill, write_slot)
 from repro.serve.scheduler import Request, SlotScheduler
 from repro.serve.steps import (make_decode_step, make_fused_decode,
-                               make_prefill_step)
+                               make_paged_decode, make_prefill_step)
+
+PAGED_FAMILIES = ("dense", "vlm", "moe")
 
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params, *, capacity: int = 256,
                  max_batch: int = 8, eos_id: int | None = None,
                  mode: str = "continuous", decode_chunk: int = 8,
-                 prefill_bucket: bool = False):
-        if mode not in ("continuous", "cohort"):
-            raise ValueError(f"mode must be continuous|cohort, got {mode!r}")
+                 prefill_bucket: bool = False, block_size: int = 16,
+                 num_blocks: int | None = None):
+        if mode not in ("continuous", "cohort", "paged"):
+            raise ValueError(
+                f"mode must be continuous|cohort|paged, got {mode!r}")
         self.cfg, self.params = cfg, params
         self.capacity, self.max_batch = capacity, max_batch
         self.eos_id, self.mode, self.decode_chunk = eos_id, mode, decode_chunk
+        self.block_size = block_size
         # pad admission prefills to power-of-two lengths so a mixed-length
         # workload compiles O(log S) prefill programs instead of one per
         # distinct prompt length. Right-padding is causally masked, so it is
@@ -60,25 +84,59 @@ class ServeEngine:
         self.scheduler = SlotScheduler(max_batch)
         self._prefill = jax.jit(make_prefill_step(cfg, capacity))
         self._decode = jax.jit(make_decode_step(cfg))
+        # donation is a no-op (and warns) on CPU
+        donate = jax.default_backend() != "cpu"
+        self.pool: BlockPool | None = None
         if mode == "continuous":
             axes = slot_axes(cfg, capacity, params=params)
-            # donation is a no-op (and warns) on CPU
-            donate = (1, 2, 3, 4) if jax.default_backend() != "cpu" else ()
             self._fused_decode = jax.jit(
                 make_fused_decode(cfg, axes, decode_chunk, eos_id),
-                donate_argnums=donate)
+                donate_argnums=(1, 2, 3, 4) if donate else ())
             self._write_slot = jax.jit(partial(write_slot, axes=axes),
-                                       donate_argnums=donate and (0,))
+                                       donate_argnums=(0,) if donate else ())
+        elif mode == "paged":
+            if cfg.family not in PAGED_FAMILIES or cfg.window is not None:
+                raise ValueError(
+                    "paged mode needs a full-attention KV-cache family "
+                    f"(one of {PAGED_FAMILIES}, window=None); got "
+                    f"family={cfg.family!r} window={cfg.window!r}")
+            if num_blocks is None:
+                # parity default: the same KV HBM a continuous engine of this
+                # max_batch/capacity would reserve up front
+                num_blocks = max_batch * capacity // block_size
+            self.pool = BlockPool(cfg, num_blocks=num_blocks,
+                                  block_size=block_size, max_batch=max_batch,
+                                  capacity=capacity, params=params)
+            self._paged_decode = jax.jit(
+                make_paged_decode(cfg, self.pool.batch_axes,
+                                  self.pool.cap_axes, block_size,
+                                  decode_chunk, eos_id),
+                donate_argnums=(1, 2, 4, 5, 6) if donate else ())
+            self._write_prefill = jax.jit(
+                partial(write_prefill, batch_axes=self.pool.batch_axes,
+                        cap_axes=self.pool.cap_axes, block_size=block_size),
+                donate_argnums=(0,) if donate else ())
         self._next_rid = 0
+        self._streamed: dict[int, int] = {}
         self.stats: dict = {}
         self.completed: dict[int, Request] = {}
 
     # -- request intake ------------------------------------------------------
 
     def submit(self, prompt, max_new_tokens: int = 16) -> int:
+        prompt = np.asarray(prompt, np.int32)
+        if self.mode == "paged":
+            total = len(prompt) + max_new_tokens
+            if (total > self.capacity
+                    or self.pool.blocks_for(total) > self.pool.num_blocks):
+                raise ValueError(
+                    f"request needs {total} cache positions "
+                    f"({self.pool.blocks_for(total)} blocks); pool holds "
+                    f"{self.pool.num_blocks} blocks of {self.block_size} "
+                    f"with per-request capacity {self.capacity}")
         rid = self._next_rid
         self._next_rid += 1
-        req = Request(rid, np.asarray(prompt, np.int32), max_new_tokens,
+        req = Request(rid, prompt, max_new_tokens,
                       submit_s=time.perf_counter())
         self.scheduler.submit(req)
         return rid
@@ -122,9 +180,31 @@ class ServeEngine:
             batch["length"] = jnp.asarray(length, jnp.int32)
         return batch
 
+    def _emit(self, reqs):
+        """Yield the not-yet-streamed suffix of each request's output.
+
+        After a preemption the request regenerates its (bitwise identical)
+        tokens from scratch; the per-rid high-water mark suppresses re-yields
+        until the regeneration passes what was already streamed."""
+        for req in reqs:
+            n = self._streamed.get(req.rid, 0)
+            delta = req.output[n:]
+            if delta:
+                self._streamed[req.rid] = n + len(delta)
+                yield req.rid, list(delta), req.done
+
+    def _prefill_first_token(self, req: Request):
+        """Run the admission prefill; returns (first_token, request cache)."""
+        logits, req_cache = self._prefill(self.params,
+                                          self._admission_batch(req))
+        first = int(jnp.argmax(logits[0, -1]))
+        if not req.first_token_s:
+            req.first_token_s = time.perf_counter()
+        return first, req_cache
+
     # -- continuous batching -------------------------------------------------
 
-    def _run_continuous(self) -> dict[int, list[int]]:
+    def _stream_continuous(self):
         sched, eos = self.scheduler, self.eos_id
         B = self.max_batch
         src = None
@@ -136,48 +216,182 @@ class ServeEngine:
         tok = np.zeros((B,), np.int32)
         live = np.zeros((B,), bool)
         remaining = np.zeros((B,), np.int32)
-        results: dict[int, list[int]] = {}
         stats = {"prefills": 0, "decode_dispatches": 0, "decode_steps": 0,
-                 "emitted_tokens": 0}
+                 "emitted_tokens": 0, "peak_concurrency": 0}
 
-        def finish(i: int) -> None:
+        def finish(i: int) -> Request:
             req = sched.release(i)
             req.finish_s = time.perf_counter()
             live[i] = False
             remaining[i] = 0
-            results[req.rid] = req.output
             self.completed[req.rid] = req
+            return req
 
+        try:
+            yield from self._continuous_loop(sched, cache, tok, live,
+                                             remaining, stats, finish)
+        finally:
+            self.stats = stats
+            self._evict_in_flight()
+
+    def _continuous_loop(self, sched, cache, tok, live, remaining, stats,
+                         finish):
+        eos = self.eos_id
         while sched.has_work():
             # admission: prefill queued requests into free slots, mid-decode
             for i, req in sched.admit():
-                batch = self._admission_batch(req)
-                logits, req_cache = self._prefill(self.params, batch)
+                first, req_cache = self._prefill_first_token(req)
                 stats["prefills"] += 1
                 stats["emitted_tokens"] += 1  # the prefill-produced token
-                first = int(jnp.argmax(logits[0, -1]))
-                req.first_token_s = time.perf_counter()
                 if req.add_token(first, eos):
                     finish(i)   # prefill token was EOS or budget == 1
-                    continue
-                cache = self._write_slot(cache, req_cache,
-                                         jnp.asarray(i, jnp.int32))
-                tok[i], live[i], remaining[i] = first, True, req.remaining
+                else:
+                    cache = self._write_slot(cache, req_cache,
+                                             jnp.asarray(i, jnp.int32))
+                    tok[i], live[i] = first, True
+                    remaining[i] = req.remaining
+                yield from self._emit([req])
+            stats["peak_concurrency"] = max(stats["peak_concurrency"],
+                                            len(sched.occupied()))
             if not live.any():
                 continue  # queue may still hold work; otherwise loop exits
             out = self._fused_decode(
                 self.params, jnp.asarray(tok), cache,
                 jnp.asarray(live), jnp.asarray(remaining))
             tok_d, cache, live_d, remaining_d, tokens, emitted = out
-            tok, live, remaining = (np.array(tok_d), np.array(live_d),
-                                    np.array(remaining_d))
+            # in place: finish() closes over these same arrays
+            tok[:], live[:] = np.asarray(tok_d), np.asarray(live_d)
+            remaining[:] = np.asarray(remaining_d)
             stats["decode_dispatches"] += 1
             stats["decode_steps"] += self.decode_chunk
             stats["emitted_tokens"] += int(np.asarray(emitted).sum())
+            reqs = [r for _, r in sched.occupied()]
             for i in sched.record_decode(tokens, emitted, eos):
                 finish(i)
-        self.stats = stats
-        return results
+            yield from self._emit(reqs)
+
+    def _evict_in_flight(self) -> None:
+        """Return in-flight requests to the queue front (youngest first, so
+        FIFO order is preserved). A consumer that abandons ``stream()``
+        mid-drain must not strand occupied slots — or, in paged mode, leak
+        their KV blocks: the next ``run()``/``stream()`` call re-admits the
+        evicted requests and (greedy decode being deterministic) continues
+        their streams exactly where the abandoned consumer stopped."""
+        sched = self.scheduler
+        for i, _ in sorted(sched.occupied(), key=lambda t: -t[1].admit_seq):
+            if self.pool is not None:
+                self.pool.release(i)
+            sched.preempt(i)
+
+    # -- paged KV ------------------------------------------------------------
+
+    def _stream_paged(self):
+        sched, pool, eos = self.scheduler, self.pool, self.eos_id
+        B, chunk = self.max_batch, self.decode_chunk
+        tok = np.zeros((B,), np.int32)
+        idx = np.zeros((B,), np.int32)
+        live = np.zeros((B,), bool)
+        remaining = np.zeros((B,), np.int32)
+        stats = {"prefills": 0, "decode_dispatches": 0, "decode_steps": 0,
+                 "emitted_tokens": 0, "preemptions": 0, "peak_concurrency": 0}
+
+        def finish(i: int) -> Request:
+            req = sched.release(i)
+            pool.release(i)
+            req.finish_s = time.perf_counter()
+            live[i] = False
+            remaining[i] = 0
+            self.completed[req.rid] = req
+            return req
+
+        def preempt(i: int) -> None:
+            pool.release(i)
+            sched.preempt(i)
+            live[i] = False
+            remaining[i] = 0
+            stats["preemptions"] += 1
+
+        try:
+            yield from self._paged_loop(tok, idx, live, remaining, stats,
+                                        finish, preempt)
+        finally:
+            self.stats = stats
+            self._evict_in_flight()
+
+    def _paged_loop(self, tok, idx, live, remaining, stats, finish, preempt):
+        sched, pool, eos = self.scheduler, self.pool, self.eos_id
+        chunk = self.decode_chunk
+        while sched.has_work():
+            # admission gated on free blocks, not free slots: a request is
+            # admitted iff its prompt (+1 headroom) fits the pool right now.
+            # ``claimed`` front-runs the ensure() calls below so one round
+            # admitting several requests cannot oversubscribe the free list
+            # (can_admit only mutates it when it returns True, i.e. exactly
+            # when the head IS admitted).
+            claimed = [0]
+
+            def can_admit(r) -> bool:
+                need = pool.blocks_for(len(r.prompt) + 1)
+                if claimed[0] + need > pool.free_blocks:
+                    return False
+                claimed[0] += need
+                return True
+
+            for i, req in sched.admit(can_admit):
+                first, req_cache = self._prefill_first_token(req)
+                stats["prefills"] += 1
+                stats["emitted_tokens"] += 1
+                if req.add_token(first, eos):
+                    finish(i)   # prefill token was EOS or budget == 1
+                    yield from self._emit([req])
+                    continue
+                ok = pool.ensure(i, len(req.prompt))
+                assert ok, "admission reserved the prompt blocks"
+                pool.data = self._write_prefill(
+                    pool.data, req_cache, jnp.asarray(pool.tables[i]))
+                tok[i], idx[i] = first, len(req.prompt)
+                live[i], remaining[i] = True, req.remaining
+                yield from self._emit([req])
+            stats["peak_concurrency"] = max(stats["peak_concurrency"],
+                                            len(sched.occupied()))
+            if not live.any():
+                continue
+            # pre-chunk block budget (oldest first): every live slot must
+            # cover its chunk's writes before the device program launches.
+            # If the pool runs dry, evict the youngest request — it has the
+            # least work to redo and re-queues at the front, keeping FIFO.
+            for i, req in sorted(sched.occupied(),
+                                 key=lambda t: t[1].admit_seq):
+                if not live[i]:
+                    continue
+                need = int(idx[i]) + min(chunk, int(remaining[i]))
+                while not pool.ensure(i, need):
+                    victim = sched.youngest()
+                    if victim == i and len(sched.occupied()) == 1:
+                        # unreachable: submit() caps a lone request's total
+                        # need at the pool size
+                        raise RuntimeError("block pool exhausted by a "
+                                           "single request")
+                    preempt(victim)
+                    if victim == i:
+                        break
+            if not live.any():
+                continue
+            out = self._paged_decode(
+                self.params, jnp.asarray(tok), pool.data,
+                jnp.asarray(pool.tables), jnp.asarray(idx),
+                jnp.asarray(live), jnp.asarray(remaining))
+            tok_d, pool.data, idx_d, live_d, remaining_d, tokens, emitted = out
+            # in place: finish()/preempt() close over these same arrays
+            tok[:], idx[:] = np.asarray(tok_d), np.asarray(idx_d)
+            live[:], remaining[:] = np.asarray(live_d), np.asarray(remaining_d)
+            stats["decode_dispatches"] += 1
+            stats["decode_steps"] += chunk
+            stats["emitted_tokens"] += int(np.asarray(emitted).sum())
+            reqs = [r for _, r in sched.occupied()]
+            for i in sched.record_decode(tokens, emitted, eos):
+                finish(i)
+            yield from self._emit(reqs)
 
     # -- cohort drain (legacy baseline) --------------------------------------
 
@@ -192,11 +406,13 @@ class ServeEngine:
         results: dict[int, list[int]] = {}
         sched = self.scheduler
         stats = {"prefills": 0, "decode_dispatches": 0, "decode_steps": 0,
-                 "emitted_tokens": 0}
+                 "emitted_tokens": 0, "peak_concurrency": 0}
         while sched.queue:
             reqs = [sched.queue.popleft()
                     for _ in range(min(self.max_batch, len(sched.queue)))]
             sched.n_admitted += len(reqs)  # cohorts bypass the slot table
+            stats["peak_concurrency"] = max(stats["peak_concurrency"],
+                                            len(reqs))
             batch = self._prefill_inputs(self._pad_batch(reqs))
             logits, cache = self._prefill(self.params, batch)
             stats["prefills"] += 1
@@ -226,10 +442,32 @@ class ServeEngine:
         self.stats = stats
         return results
 
-    # -- entry point ---------------------------------------------------------
+    # -- entry points --------------------------------------------------------
+
+    def stream(self):
+        """Generator over ``(rid, delta_tokens, done)`` events.
+
+        Deltas arrive at admission (the prefill-produced first token) and at
+        every ``decode_chunk`` boundary; each request's concatenated deltas
+        are exactly its ``run()`` output, and ``done=True`` rides on its
+        final delta. Preempted requests never re-yield tokens that were
+        already streamed. Abandoning the generator mid-drain (close/break)
+        evicts the in-flight requests back to the queue — slots and KV
+        blocks are reclaimed, and a later ``run()``/``stream()`` call
+        resumes exactly where the abandoned stream stopped. The legacy
+        cohort drain has no chunk boundaries to stream at — use
+        ``mode="continuous"`` or ``mode="paged"``."""
+        if self.mode == "cohort":
+            raise ValueError("stream() requires mode='continuous'|'paged'")
+        gen = (self._stream_paged() if self.mode == "paged"
+               else self._stream_continuous())
+        yield from gen
 
     def run(self) -> dict[int, list[int]]:
         """Drain the queue; returns {rid: generated tokens}."""
         if self.mode == "cohort":
             return self._run_cohort()
-        return self._run_continuous()
+        results: dict[int, list[int]] = {}
+        for rid, delta, _done in self.stream():
+            results.setdefault(rid, []).extend(delta)
+        return results

@@ -17,6 +17,13 @@ chunk -> ``record_decode()`` with the emitted token grid -> repeat until
 ``has_work()`` is false. Requests can therefore be admitted *mid-decode* the
 moment any slot frees up, which is the whole point of continuous batching.
 
+Under ``mode="paged"`` the same scheduler becomes block-aware: ``admit()``
+takes a ``can_admit`` gate (the engine passes the block pool's free-block
+check, so admission is bounded by KV HBM actually in use, not by slot
+count), and :meth:`preempt` evicts the *youngest* request back to the queue
+front when a decode chunk would exhaust the pool. A gated admission that
+fails leaves the queue head in place — FIFO order is never rotated.
+
 Module contract: pure host-side Python/numpy — no JAX, no device arrays, no
 jit; all device state (slot caches, in-scan masking) lives in
 ``repro.serve.batch`` / ``repro.serve.steps``, and nothing here is traced.
@@ -36,6 +43,7 @@ class Request:
     max_new_tokens: int = 16
     output: list[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    admit_seq: int = -1               # admission order (preemption picks max)
     # wall-clock marks filled in by the engine (benchmark latency accounting)
     submit_s: float = 0.0
     first_token_s: float = 0.0
@@ -61,6 +69,15 @@ class Request:
             self.done = True
         return self.done
 
+    def restart(self) -> None:
+        """Reset generation state after a preemption.
+
+        The request re-runs from scratch (prefill + greedy decode), which
+        regenerates the discarded tokens bit-for-bit — greedy decode is
+        deterministic — so preemption never changes a request's stream."""
+        self.output.clear()
+        self.done = False
+
 
 class SlotScheduler:
     """Fixed-width slot table + FIFO admission queue."""
@@ -72,6 +89,7 @@ class SlotScheduler:
         self.queue: deque[Request] = deque()
         self.n_admitted = 0
         self.n_finished = 0
+        self.n_preempted = 0
 
     # -- queue ---------------------------------------------------------------
 
@@ -89,19 +107,31 @@ class SlotScheduler:
     def occupied(self) -> list[tuple[int, Request]]:
         return [(i, r) for i, r in enumerate(self.slots) if r is not None]
 
-    def admit(self) -> list[tuple[int, Request]]:
+    def admit(self, can_admit=None) -> list[tuple[int, Request]]:
         """Pop queued requests into free slots (FIFO x lowest slot first).
+
+        ``can_admit(req) -> bool`` gates each admission on external resources
+        (the paged engine passes the block pool's free-block check). The head
+        is *peeked* before it is popped: a failed admission leaves it at the
+        front of the queue — nothing behind it may overtake, and the same
+        request is retried first next round. (Pop-then-requeue would rotate a
+        temporarily-unadmittable head behind later arrivals and permanently
+        break FIFO order.)
 
         Returns the (slot, request) pairs admitted this round; the caller
         prefills each request and writes its cache into the slot, then calls
         :meth:`release` immediately if the prefill token already finished it
         (prefill-EOS or ``max_new_tokens == 1``)."""
         admitted = []
-        for i in self.free_slots():
-            if not self.queue:
+        free = self.free_slots()
+        while free and self.queue:
+            req = self.queue[0]
+            if can_admit is not None and not can_admit(req):
                 break
-            req = self.queue.popleft()
+            self.queue.popleft()
+            i = free.pop(0)
             self.slots[i] = req
+            req.admit_seq = self.n_admitted
             self.n_admitted += 1
             admitted.append((i, req))
         return admitted
@@ -112,6 +142,30 @@ class SlotScheduler:
         self.slots[i] = None
         self.n_finished += 1
         return req
+
+    def preempt(self, i: int) -> Request:
+        """Evict slot ``i``'s request back to the FRONT of the queue.
+
+        The paged engine calls this when a decode chunk would exhaust the
+        block pool, always picking the *youngest* request (max ``admit_seq``
+        over occupied slots) — it has the least work to redo and every
+        request older than it is already ahead of the queue, so appendleft
+        preserves global FIFO order. The request restarts from scratch on
+        re-admission (see :meth:`Request.restart`)."""
+        req = self.slots[i]
+        assert req is not None, f"slot {i} is free, cannot preempt"
+        self.slots[i] = None
+        self.n_preempted += 1
+        req.restart()
+        self.queue.appendleft(req)
+        return req
+
+    def youngest(self) -> int | None:
+        """Occupied slot holding the most recently admitted request."""
+        occ = self.occupied()
+        if not occ:
+            return None
+        return max(occ, key=lambda t: t[1].admit_seq)[0]
 
     # -- decode accounting ---------------------------------------------------
 

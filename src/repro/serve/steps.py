@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.models import decode_step, init_cache, prefill
 from repro.models.config import ModelConfig
+from repro.serve.batch import gather_pages, scatter_token, slice_token
 
 
 def make_prefill_step(cfg: ModelConfig, capacity: int):
@@ -108,6 +109,76 @@ def make_fused_decode(cfg: ModelConfig, axes, decode_chunk: int,
             body, (tok, cache, live, remaining), None, length=decode_chunk)
         tok, cache, live, remaining = carry
         return tok, cache, live, remaining, tokens, emitted
+
+    return chunk
+
+
+# ---------------------------------------------------------------------------
+# Paged KV: block-table indirection inside the scan-fused chunk
+# ---------------------------------------------------------------------------
+
+def make_paged_decode(cfg: ModelConfig, batch_axes, cap_axes,
+                      block_size: int, decode_chunk: int,
+                      eos_id: int | None):
+    """Scan-fused paged decode: ``decode_chunk`` greedy tokens for every live
+    slot in ONE device program, reading and writing KV through per-slot block
+    tables instead of dense per-slot reservations.
+
+    Per scan step, each slot (vmapped) gathers its logical dense cache from
+    the physical pool via its ``[max_blocks]`` block table
+    (:func:`~repro.serve.batch.gather_pages`), runs the unmodified
+    ``models.decode_step`` on it — so the math is bit-for-bit the serial
+    single-request computation — and hands back the one-token KV values
+    written at its position (:func:`~repro.serve.batch.slice_token`). The
+    scan body then appends all slots' tokens to their tail blocks in one
+    scatter (:func:`~repro.serve.batch.scatter_token`); dead slots are routed
+    to the trash block, so the program shape is static and the host only
+    needs to allocate blocks *ahead* of the chunk (``BlockPool.ensure``).
+
+    Signature: ``(params, tok [B], pool_data, tables [B, max_blocks],
+    idx [B], live [B], remaining [B]) -> (tok, pool_data, idx, live,
+    remaining, tokens [chunk, B], emitted [chunk, B])`` — same
+    emit/EOS/budget masking rule as :func:`make_fused_decode`, so
+    ``SlotScheduler.record_decode`` consumes both grids identically.
+    """
+    def chunk(params, tok, pool_data, tables, idx, live, remaining):
+        B = tok.shape[0]
+        max_blocks = tables.shape[1]
+        trash = jax.tree.leaves(pool_data)[0].shape[0] - 1
+
+        def one(tok_i, table_i, idx_i, pool):
+            dense = gather_pages(pool, table_i, batch_axes=batch_axes,
+                                 cap_axes=cap_axes)
+            logits, new = decode_step(cfg, params, tok_i[None, None],
+                                      {**dense, "idx": idx_i})
+            next_tok = jnp.argmax(logits[0, -1], axis=-1).astype(jnp.int32)
+            writes = slice_token(new, idx_i, batch_axes=batch_axes,
+                                 cap_axes=cap_axes)
+            return next_tok, writes
+
+        def body(carry, _):
+            tok, pool_data, idx, live, remaining = carry
+            next_tok, writes = jax.vmap(one, in_axes=(0, 0, 0, None))(
+                tok, tables, idx, pool_data)
+            page = jnp.clip(idx // block_size, 0, max_blocks - 1)
+            blk = jnp.where(live, tables[jnp.arange(B), page], trash)
+            pool_data = scatter_token(pool_data, writes, blk,
+                                      idx % block_size)
+            emit = live
+            remaining = jnp.where(emit, remaining - 1, remaining)
+            if eos_id is None:
+                hit_eos = jnp.zeros_like(live)
+            else:
+                hit_eos = emit & (next_tok == eos_id)
+            live = live & ~hit_eos & (remaining > 0)
+            tok = jnp.where(emit, next_tok, tok)
+            return (tok, pool_data, idx + 1, live, remaining), (next_tok, emit)
+
+        carry, (tokens, emitted) = jax.lax.scan(
+            body, (tok, pool_data, idx, live, remaining), None,
+            length=decode_chunk)
+        tok, pool_data, idx, live, remaining = carry
+        return tok, pool_data, idx, live, remaining, tokens, emitted
 
     return chunk
 

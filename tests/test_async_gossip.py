@@ -152,6 +152,35 @@ def test_expected_staleness_closed_form():
     assert abs(np.mean(seen) - expected_staleness(tau, q)) < 0.01
 
 
+def test_adaptive_deadline_pins_drop_rate():
+    """The adaptive deadline is the q-quantile of the delay tail: ~1-q of
+    sampled deliveries miss it, and drop_prob() at that deadline agrees."""
+    from repro.core.topology import EdgeDelayModel
+    model = EdgeDelayModel(base_s=2e-3, straggler_prob=0.3,
+                           straggler_scale_s=40e-3)
+    rng = np.random.default_rng(0)
+    d90 = model.adaptive_deadline(0.90, n_edges=16, rounds=2000, rng=rng)
+    d99 = model.adaptive_deadline(0.99, n_edges=16, rounds=2000, rng=rng)
+    assert d99 > d90 > 2e-3  # monotone in q, above the deterministic base
+    # empirical miss rate at the q-deadline is ~1-q
+    delays = model.sample(np.random.default_rng(1), 16, 2000)
+    assert abs((delays > d90).mean() - 0.10) < 0.02
+    # and the analytic per-edge drop prob the async mix consumes agrees
+    assert abs(model.drop_prob(d90, 16).mean() - 0.10) < 0.02
+
+
+def test_adaptive_deadline_from_observed_delays():
+    """Operating on measured delays (no model sampling): plain quantile."""
+    from repro.core.topology import EdgeDelayModel
+    model = EdgeDelayModel()
+    obs = np.array([1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0, 9.0, 10.0])
+    assert model.adaptive_deadline(0.5, observed=obs) == pytest.approx(5.5)
+    with pytest.raises(ValueError, match="quantile"):
+        model.adaptive_deadline(1.5, observed=obs)
+    with pytest.raises(ValueError, match="n_edges"):
+        model.adaptive_deadline(0.9)
+
+
 def test_ring_wmi_rolled_matches_dense():
     """(W−I)·h via rolls == the dense einsum for the ring W."""
     W = ring(6).weights

@@ -60,6 +60,77 @@ def test_record_decode_budget_and_eos():
     assert not s.queue and s.free_slots() == []    # caller releases
 
 
+def test_failed_admission_keeps_queue_head():
+    """FIFO head-of-line regression: a gated admission that fails must leave
+    the head at the FRONT of the queue — nothing behind it may overtake, and
+    the exact same request must be first in line on the next admit()."""
+    s = SlotScheduler(2)
+    for rid in range(3):
+        s.submit(_req(rid))
+    # gate rejects everything: head stays put, order intact, nothing admitted
+    assert s.admit(can_admit=lambda r: False) == []
+    assert [r.rid for r in s.queue] == [0, 1, 2]
+    # gate rejects only rid 0: later requests must NOT be admitted around it
+    assert s.admit(can_admit=lambda r: r.rid != 0) == []
+    assert [r.rid for r in s.queue] == [0, 1, 2]
+    # gate opens: admissions resume in the original FIFO order
+    admitted = s.admit(can_admit=lambda r: True)
+    assert [(i, r.rid) for i, r in admitted] == [(0, 0), (1, 1)]
+    assert [r.rid for r in s.queue] == [2]
+
+
+def test_admission_gate_sees_each_head_once_per_round():
+    """The gate is consulted exactly once per admission attempt (it may
+    reserve resources on True), and a mid-round rejection stops the round."""
+    s = SlotScheduler(3)
+    for rid in range(3):
+        s.submit(_req(rid))
+    seen = []
+
+    def gate(r):
+        seen.append(r.rid)
+        return r.rid < 1  # admit rid 0, then stop at rid 1
+
+    admitted = s.admit(can_admit=gate)
+    assert [r.rid for _, r in admitted] == [0]
+    assert seen == [0, 1]          # rid 2 never consulted: FIFO stops at 1
+    assert [r.rid for r in s.queue] == [1, 2]
+
+
+def test_preempt_requeues_at_front_and_restarts():
+    s = SlotScheduler(2)
+    for rid in range(3):
+        s.submit(_req(rid, max_new=4))
+    s.admit()
+    a = s.slots[1]
+    a.add_token(5, None)
+    assert a.output == [5]
+    req = s.preempt(1)             # youngest of the two admitted
+    assert req is a
+    assert s.slots[1] is None and s.n_preempted == 1
+    # back at the FRONT (older than everything still queued), state reset
+    assert [r.rid for r in s.queue] == [1, 2]
+    assert req.output == [] and not req.done and req.remaining == 4
+    # next admit() re-admits it first
+    admitted = s.admit()
+    assert admitted[0][1].rid == 1
+
+
+def test_youngest_tracks_admission_order():
+    s = SlotScheduler(3)
+    for rid in range(4):
+        s.submit(_req(rid))
+    s.admit()
+    assert s.youngest() == 2       # rid 2, admitted last
+    s.release(2)
+    s.admit()                      # rid 3 into freed slot 2
+    assert s.youngest() == 2       # same slot, but now the newest request
+    s.release(2)
+    assert s.youngest() == 1       # falls back to rid 1
+    s.release(0), s.release(1)
+    assert s.youngest() is None
+
+
 def test_has_work_tracks_queue_and_slots():
     s = SlotScheduler(1)
     assert not s.has_work()
