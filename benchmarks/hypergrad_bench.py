@@ -21,6 +21,7 @@ def main(dy: int = 64):
     rows = []
     for Jn in (1, 4, 16, 64):
         cfg = HypergradConfig(J=Jn, lip_gy=prob.lip_gy, randomize=False)
+        # repro: noqa[RECOMPILE_HAZARD] one compile per J config by design; each wrapper is reused 10x within its own iteration
         f = jax.jit(lambda xx, yy: expected_hypergrad(prob, cfg, xx, yy, key))
         f(x, y)
         t0 = time.perf_counter()

@@ -36,12 +36,22 @@ PERF_KEYS = ("tokens_per_sec", "steps_per_sec")
 
 
 def load_bench_records() -> dict[str, dict]:
-    """{bench name: payload} for every committed BENCH_<name>.json."""
+    """{bench name: payload} for every committed BENCH_<name>.json.
+
+    A record that is not valid JSON (truncated write, bad merge) exits with
+    a clear message instead of a traceback — the compare gate cannot say
+    anything meaningful against a corrupt baseline."""
     records = {}
     for path in sorted(glob.glob(os.path.join(RESULTS, "BENCH_*.json"))):
         name = os.path.basename(path)[len("BENCH_"):-len(".json")]
         with open(path) as f:
-            records[name] = json.load(f)
+            try:
+                records[name] = json.load(f)
+            except json.JSONDecodeError as e:
+                raise SystemExit(
+                    f"bench compare: {path} is not valid JSON ({e}) — "
+                    "delete or regenerate it (PYTHONPATH=src python -m "
+                    "benchmarks.run) and commit the fresh record")
     return records
 
 
@@ -67,9 +77,22 @@ def compare_records(baseline: dict[str, dict], fresh: dict[str, dict],
                     tol: float) -> list[str]:
     """Regression report: fresh perf metrics that dropped > tol vs baseline.
 
-    Metrics present only on one side are reported informationally but do not
-    fail the gate (new benches appear, old ones get renamed)."""
+    Metric-set mismatches are failures too, with an explicit remedy: a
+    metric only in the committed baseline means the bench stopped emitting
+    it; a metric only in the fresh record means the committed
+    ``BENCH_<name>.json`` predates it — both resolve by regenerating and
+    committing the record (or restoring the metric), never by silently
+    comparing a smaller intersection."""
     failures = []
+    for name in sorted(set(baseline) - set(fresh)):
+        failures.append(
+            f"{name}: committed BENCH_{name}.json has no fresh counterpart "
+            "— the bench was removed or renamed; delete the stale record "
+            "or restore the bench")
+    for name in sorted(set(fresh) - set(baseline)):
+        failures.append(
+            f"{name}: fresh record BENCH_{name}.json has no committed "
+            "baseline — commit the regenerated record")
     for name in sorted(set(baseline) & set(fresh)):
         base_m, new_m = perf_metrics(baseline[name]), perf_metrics(fresh[name])
         for key in sorted(set(base_m) & set(new_m)):
@@ -84,10 +107,20 @@ def compare_records(baseline: dict[str, dict], fresh: dict[str, dict],
                 failures.append(f"{name}:{key} {b:.2f} -> {n:.2f} "
                                 f"({ratio:.2f}x < {1.0 - tol:.2f}x)")
         for key in sorted(set(base_m) - set(new_m)):
-            print(f"compare {name}:{key}: dropped from fresh record "
+            print(f"compare {name}:{key}: MISSING from fresh record "
                   f"(baseline={base_m[key]:.2f})")
+            failures.append(
+                f"{name}:{key}: metric in the committed baseline is missing "
+                "from the fresh record — the bench stopped emitting it; "
+                f"restore the metric or commit a regenerated "
+                f"BENCH_{name}.json")
         for key in sorted(set(new_m) - set(base_m)):
-            print(f"compare {name}:{key}: new metric ({new_m[key]:.2f})")
+            print(f"compare {name}:{key}: NEW metric ({new_m[key]:.2f}) "
+                  "absent from committed baseline")
+            failures.append(
+                f"{name}:{key}: metric in the fresh record is missing from "
+                "the committed baseline — commit the regenerated "
+                f"BENCH_{name}.json")
     return failures
 
 
@@ -142,8 +175,9 @@ def main() -> None:
         failures = compare_records(baseline, load_bench_records(),
                                    args.compare_tol)
         if failures:
-            print(f"\nbench compare FAILED ({len(failures)} regression(s) "
-                  f"beyond {args.compare_tol:.0%}):", file=sys.stderr)
+            print(f"\nbench compare FAILED ({len(failures)} problem(s): "
+                  f"regressions beyond {args.compare_tol:.0%} and/or "
+                  "metric-set mismatches):", file=sys.stderr)
             for f in failures:
                 print(f"  {f}", file=sys.stderr)
             sys.exit(1)

@@ -1,0 +1,27 @@
+"""Static-analysis suite for the repro codebase.
+
+Three engines, one findings model:
+
+* :mod:`repro.analysis.jaxpr_lint` — dataflow passes over the jaxprs of the
+  registered entry points (:mod:`repro.analysis.entrypoints`): PRNG key-reuse
+  taint (the bug class this repo shipped twice), dead scan carries, and
+  fp-dtype widening inside scan bodies.
+* :mod:`repro.analysis.ast_rules` — AST lint over ``src/``, ``benchmarks/``,
+  ``examples/``: host syncs reachable from jitted code, recompile hazards,
+  and PRNG keys minted inside loops.
+* :mod:`repro.analysis.contracts` — protocol contracts checked statically:
+  the stateful-mix protocol, every algorithm × mix pair traces, mixing
+  matrices are doubly stochastic, and the :class:`BlockAllocator` free-list /
+  owner-map invariants hold over exhaustively enumerated op sequences.
+
+``python -m repro.analysis`` runs all three (see :mod:`repro.analysis.cli`);
+findings are suppressible per line (``# repro: noqa[RULE] reason``) or via a
+committed baseline file. The rule catalogue lives in
+:mod:`repro.analysis.catalogue` (``--explain RULE``).
+"""
+from repro.analysis.catalogue import RULES, explain
+from repro.analysis.findings import (Finding, load_baseline, render_report,
+                                     save_baseline)
+
+__all__ = ["Finding", "RULES", "explain", "load_baseline", "save_baseline",
+           "render_report"]

@@ -1,0 +1,268 @@
+"""Rule catalogue: one entry per rule id, rendered by ``--explain RULE``.
+
+Every entry documents what fires, why it is a correctness/perf hazard for
+this codebase specifically, and the minimal bad/good pair (the same pairs the
+self-test corpus in tests/test_analysis.py pins).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    id: str
+    engine: str       # jaxpr | ast | contracts | meta
+    title: str
+    rationale: str
+    bad: str
+    good: str
+
+
+RULES: dict[str, Rule] = {}
+
+
+def _rule(**kw):
+    r = Rule(**kw)
+    RULES[r.id] = r
+    return r
+
+
+_rule(
+    id="KEY_REUSE",
+    engine="jaxpr",
+    title="PRNG key consumed by more than one random primitive",
+    rationale=(
+        "A key consumed by >= 2 random_* primitives (sampling, split, or "
+        "fold_in) without an interposed split/fold_in yields correlated "
+        "draws. The paper's estimators (Eq. 4 Neumann samples, VRDBO's "
+        "variance-reduced momentum) require independent streams per draw — "
+        "correlated randomness makes them silently biased, not crashing. "
+        "This repo shipped the bug twice (PR 1 run loop: one key for the "
+        "batch AND the J-tilde draw; PR 3 kb-batch/J-tilde/X0/Y0 streams). "
+        "The pass also fires through scan: a key carried unchanged while "
+        "also being consumed in the body is reused on every iteration, and "
+        "a loop-invariant (closed-over) key sampled inside a scan body "
+        "produces the same draw every step."),
+    bad="""\
+def step(key, x):
+    batch = jax.random.normal(key, (4,))        # consumer 1
+    jt = jax.random.randint(key, (), 0, 10)     # consumer 2: same key!
+    return x + batch.sum() * jt
+""",
+    good="""\
+def step(key, x):
+    kb, kj = jax.random.split(key)
+    batch = jax.random.normal(kb, (4,))
+    jt = jax.random.randint(kj, (), 0, 10)
+    return x + batch.sum() * jt
+""",
+)
+
+_rule(
+    id="DEAD_CARRY",
+    engine="jaxpr",
+    title="scan carry component passed through unchanged and never read",
+    rationale=(
+        "A carry leaf that the scan body neither reads nor updates is dead "
+        "weight: it is copied through every iteration (donation or not, it "
+        "occupies HBM and memory bandwidth for the whole fused chunk) and "
+        "usually signals a state field the algorithm forgot to update — the "
+        "failure mode where an estimator silently stays at its init value."),
+    bad="""\
+def body(carry, x):
+    a, b = carry
+    return (a + x, b), None     # b: never read, never written
+""",
+    good="""\
+def body(carry, x):
+    a = carry
+    return a + x, None          # carry only what the loop actually uses
+""",
+)
+
+_rule(
+    id="DTYPE_WIDEN",
+    engine="jaxpr",
+    title="floating dtype widened inside a scan body",
+    rationale=(
+        "An op inside a scan body whose float output is strictly wider than "
+        "every float input (bf16 -> f32, f32 -> f64) silently multiplies the "
+        "per-step memory traffic of the hottest loops in the program. "
+        "Intentional mixed-precision accumulation belongs outside the scan "
+        "or behind an explicit noqa with the reason recorded."),
+    bad="""\
+def body(acc, x_bf16):
+    return acc + x_bf16.astype(jnp.float32), None   # widen inside the loop
+""",
+    good="""\
+def scan_then_widen(xs_bf16):
+    total, _ = jax.lax.scan(lambda c, x: (c + x, None),
+                            jnp.zeros((), jnp.bfloat16), xs_bf16)
+    return total.astype(jnp.float32)                # widen once, outside
+""",
+)
+
+_rule(
+    id="HOST_SYNC",
+    engine="ast",
+    title="host synchronization inside code reachable from jit",
+    rationale=(
+        "`.item()`, `float(...)`, `int(...)`, `np.asarray(...)` on a traced "
+        "value force a device->host transfer; under `jit` they either fail "
+        "(tracer leak) or, in host callbacks / between dispatches, serialize "
+        "the pipeline — the dispatch-overhead class engine_bench measures. "
+        "The AST pass flags them inside functions that are jitted, decorated "
+        "with jit, or passed to scan/vmap/shard_map (including nested defs)."),
+    bad="""\
+def body(carry, x):
+    scale = float(x.max())           # host sync inside a scan body
+    return carry * scale, None
+""",
+    good="""\
+def body(carry, x):
+    return carry * x.max(), None     # stay on device
+""",
+)
+
+_rule(
+    id="RECOMPILE_HAZARD",
+    engine="ast",
+    title="pattern that defeats the jit compile cache",
+    rationale=(
+        "Three shapes of the same hazard: (a) `jax.jit` called inside a "
+        "for/while loop builds a fresh jitted callable (and usually a fresh "
+        "compile) per iteration; (b) `jax.jit(lambda ...)(...)` immediately "
+        "invoked creates-and-discards the cache entry every call; (c) a "
+        "static argument fed with an unhashable literal (list/dict/set) "
+        "raises or, via `str()` workarounds, recompiles on every ordering. "
+        "The engine's per-interval fused chunks only pay off because the "
+        "chunk is compiled once — any of these silently reintroduces the "
+        "per-step dispatch cost."),
+    bad="""\
+for step in range(100):
+    out = jax.jit(lambda a: a * 2)(x)    # fresh cache entry per iteration
+""",
+    good="""\
+f = jax.jit(lambda a: a * 2)
+for step in range(100):
+    out = f(x)
+""",
+)
+
+_rule(
+    id="KEY_IN_LOOP",
+    engine="ast",
+    title="jax.random.PRNGKey built from a non-constant inside a loop",
+    rationale=(
+        "Minting keys inside a loop from a loop-varying value (`PRNGKey(i)`, "
+        "`PRNGKey(time.time())`) gives streams with no independence "
+        "guarantee between iterations — adjacent integer seeds are NOT "
+        "independent under threefry. Derive per-iteration keys from one "
+        "root key via split/fold_in (`key_schedule` in core.engine is the "
+        "blessed pattern)."),
+    bad="""\
+for i in range(steps):
+    k = jax.random.PRNGKey(i)            # adjacent seeds, no guarantee
+    draw = jax.random.normal(k, (4,))
+""",
+    good="""\
+keys = jax.random.split(jax.random.PRNGKey(0), steps)
+for i in range(steps):
+    draw = jax.random.normal(keys[i], (4,))
+""",
+)
+
+_rule(
+    id="MIX_PROTOCOL",
+    engine="contracts",
+    title="mix backend does not implement the stateful-mix protocol",
+    rationale=(
+        "The engine threads stateful-mix carries by protocol: a mix with "
+        "`stateful = True` must expose `state0(site_shapes, site_index)`, "
+        "`bind(states)`, `apply(tree, state)` AND be callable statelessly "
+        "for the t=0 init. A missing/mis-signatured member only explodes at "
+        "runtime on the first stateful run of that backend — this check "
+        "makes it a lint failure at registration time."),
+    bad="""\
+class BrokenMix:
+    stateful = True
+    def bind(self, states): ...
+    def apply(self, tree, state): ...
+    # state0 missing: engine crashes (or silently zero-seeds) at t=0
+""",
+    good="""\
+class GoodMix:
+    stateful = True
+    def state0(self, site_shapes, site_index): ...
+    def bind(self, states): ...
+    def apply(self, tree, state): ...
+    def __call__(self, tree): ...
+""",
+)
+
+_rule(
+    id="TRACE_FAIL",
+    engine="contracts",
+    title="registered entry point fails to trace",
+    rationale=(
+        "Every registered algorithm x mix combo (and the serving chunk "
+        "builders and data samplers) must trace at abstract bench-scale "
+        "shapes. A combo that only explodes when a user selects it is a "
+        "runtime landmine; tracing is cheap and static."),
+    bad="registering an algorithm whose step only works for one mix backend",
+    good="all ALGORITHMS x MIX_BACKENDS combos trace under eval_shape",
+)
+
+_rule(
+    id="W_STOCHASTIC",
+    engine="contracts",
+    title="mixing matrix violates Assumption 1",
+    rationale=(
+        "Every convergence rate in the paper assumes W symmetric, doubly "
+        "stochastic, with spectral gap > 0 (Assumption 1). A registered "
+        "topology whose W drifts from that (bad self-weights, asymmetric "
+        "edits, disconnected graphs) changes the fixed point of the gossip "
+        "averaging — consensus converges to the wrong point or not at all."),
+    bad="W = [[0.9, 0.2], [0.1, 0.8]]   # rows sum to 1.1 / 0.9",
+    good="topology.check_assumption1() passes for every registered builder",
+)
+
+_rule(
+    id="BLOCKPOOL_SPEC",
+    engine="contracts",
+    title="block allocator violates the free-list/owner-map invariants",
+    rationale=(
+        "The paged-KV allocator must preserve, after EVERY public op: "
+        "(1) conservation — free + owned == num_blocks; (2) agreement — "
+        "table entries below a slot's count are exactly the blocks owned by "
+        "it; (3) trash padding — entries at/after the count point at the "
+        "trash block; (4) exclusivity — no block has two owners. The spec "
+        "checker enumerates all ensure/release sequences to a fixed depth "
+        "on a small pool, so an allocator edit that leaks or double-frees "
+        "only on a rare interleaving still fails deterministically."),
+    bad="a release() that forgets to append freed blocks to the free list",
+    good="BlockAllocator passes check_blockpool_spec() exhaustively",
+)
+
+_rule(
+    id="BAD_NOQA",
+    engine="meta",
+    title="suppression without a reason (or naming an unknown rule)",
+    rationale=(
+        "`# repro: noqa[RULE] reason` requires the reason: a suppression is "
+        "a claim that the finding is safe, and the claim must be auditable "
+        "in place. Empty reasons and typo'd rule ids are findings "
+        "themselves."),
+    bad="x = jax.random.normal(key, ())  # repro: noqa[KEY_REUSE]",
+    good=("x = jax.random.normal(key, ())  "
+          "# repro: noqa[KEY_REUSE] key is consumed exactly once per branch"),
+)
+
+
+def explain(rule_id: str) -> str:
+    r = RULES.get(rule_id)
+    if r is None:
+        raise KeyError(f"unknown rule {rule_id!r}; have {sorted(RULES)}")
+    return (f"{r.id} [{r.engine}] — {r.title}\n\n{r.rationale}\n\n"
+            f"BAD:\n{r.bad.rstrip()}\n\nGOOD:\n{r.good.rstrip()}")

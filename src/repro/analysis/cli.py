@@ -1,0 +1,147 @@
+"""``python -m repro.analysis`` — run the full static-analysis suite.
+
+Exit codes: 0 clean (or all findings match the baseline), 1 findings (or new
+findings vs baseline), 2 usage error.
+
+Examples::
+
+    python -m repro.analysis src benchmarks examples
+    python -m repro.analysis --explain KEY_REUSE
+    python -m repro.analysis --baseline                   # CI gate
+    python -m repro.analysis --write-baseline             # accept current
+    python -m repro.analysis --engines ast src            # fast subset
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from repro.analysis.catalogue import RULES, explain
+from repro.analysis.findings import (Finding, apply_suppressions,
+                                     diff_baseline, load_baseline,
+                                     noqa_findings, parse_suppressions,
+                                     render_report, report_json,
+                                     save_baseline)
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__)))))
+DEFAULT_PATHS = ["src", "benchmarks", "examples"]
+DEFAULT_BASELINE = os.path.join("tools", "analysis_baseline.json")
+ENGINES = ("ast", "jaxpr", "contracts")
+
+
+def _run_engines(paths: list[str], engines: tuple[str, ...],
+                 ) -> tuple[list[Finding], list, list[str]]:
+    from repro.analysis.ast_rules import iter_python_files, lint_file
+    findings: list[Finding] = []
+    allowed: list = []
+    skipped: list[str] = []
+    sups = []
+    for ap, rp in iter_python_files(REPO_ROOT, paths):
+        with open(ap, encoding="utf-8") as fh:
+            text = fh.read()
+        sups.extend(parse_suppressions(text, rp))
+        if "ast" in engines:
+            from repro.analysis.ast_rules import lint_source
+            findings.extend(lint_source(text, rp))
+    if "jaxpr" in engines:
+        from repro.analysis.entrypoints import trace_all
+        f, a, s = trace_all()
+        findings.extend(f)
+        allowed.extend(a)
+        skipped.extend(s)
+    if "contracts" in engines:
+        from repro.analysis.contracts import check_all
+        findings.extend(check_all())
+    findings.extend(noqa_findings(sups, RULES))
+    kept, suppressed = apply_suppressions(findings, sups)
+    return kept, suppressed + allowed, skipped
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jaxpr/AST/contract static analysis for this repo")
+    ap.add_argument("paths", nargs="*", default=None,
+                    help=f"files/dirs to scan (default: {DEFAULT_PATHS})")
+    ap.add_argument("--explain", metavar="RULE",
+                    help="print the catalogue entry for RULE and exit")
+    ap.add_argument("--baseline", nargs="?", const=DEFAULT_BASELINE,
+                    default=None, metavar="FILE",
+                    help="compare findings against a baseline; fail only on "
+                         f"NEW findings (default file: {DEFAULT_BASELINE})")
+    ap.add_argument("--write-baseline", nargs="?", const=DEFAULT_BASELINE,
+                    default=None, metavar="FILE",
+                    help="write the current findings as the baseline")
+    ap.add_argument("--engines", default=",".join(ENGINES),
+                    help="comma list of engines to run "
+                         f"(default: {','.join(ENGINES)})")
+    ap.add_argument("--report", metavar="FILE",
+                    help="also write a JSON findings report to FILE")
+    args = ap.parse_args(argv)
+
+    if args.explain:
+        try:
+            print(explain(args.explain))
+        except KeyError as e:
+            print(e.args[0], file=sys.stderr)
+            return 2
+        return 0
+
+    engines = tuple(e.strip() for e in args.engines.split(",") if e.strip())
+    bad = [e for e in engines if e not in ENGINES]
+    if bad:
+        print(f"unknown engine(s) {bad}; have {list(ENGINES)}",
+              file=sys.stderr)
+        return 2
+
+    paths = args.paths or DEFAULT_PATHS
+    missing = [p for p in paths
+               if not os.path.exists(os.path.join(REPO_ROOT, p))
+               and not os.path.exists(p)]
+    if missing:
+        print(f"no such path(s): {missing}", file=sys.stderr)
+        return 2
+
+    findings, suppressed, skipped = _run_engines(paths, engines)
+
+    if args.write_baseline:
+        save_baseline(findings, os.path.join(REPO_ROOT, args.write_baseline)
+                      if not os.path.isabs(args.write_baseline)
+                      else args.write_baseline)
+        print(f"baseline written: {args.write_baseline} "
+              f"({len(findings)} finding(s))")
+        return 0
+
+    new = stale = None
+    if args.baseline is not None:
+        bpath = (args.baseline if os.path.isabs(args.baseline)
+                 else os.path.join(REPO_ROOT, args.baseline))
+        try:
+            baseline = load_baseline(bpath)
+        except (ValueError, json.JSONDecodeError) as e:
+            print(f"bad baseline file: {e}", file=sys.stderr)
+            return 2
+        new, stale = diff_baseline(findings, baseline)
+
+    print(render_report(findings, suppressed, skipped))
+    if args.report:
+        payload = report_json(findings, suppressed, skipped, new, stale)
+        with open(args.report, "w") as fh:
+            json.dump(payload, fh, indent=2, sort_keys=True)
+            fh.write("\n")
+        print(f"report written: {args.report}")
+
+    if args.baseline is not None:
+        if stale:
+            print(f"note: {len(stale)} stale baseline entr(y/ies) no longer "
+                  "found — consider --write-baseline")
+        if new:
+            print(f"FAIL: {len(new)} new finding(s) vs baseline:")
+            for f in sorted(new):
+                print(f"  {f.render()}")
+            return 1
+        return 0
+    return 1 if findings else 0

@@ -1,0 +1,248 @@
+"""Protocol contracts checked statically (no compiled execution).
+
+* **MIX_PROTOCOL** — every registered mix backend builds and is callable;
+  stateful mixes (``stateful = True``) expose the full carry protocol
+  ``state0(site_shapes, site_index)`` / ``bind(states)`` /
+  ``apply(tree, state)`` with compatible arities; a mix that defines part of
+  the protocol without declaring ``stateful`` is flagged as incoherent.
+* **W_STOCHASTIC** — every registered topology builder produces a ``W``
+  satisfying Assumption 1 (symmetric, doubly stochastic, spectral gap > 0)
+  at a probe size.
+* **BLOCKPOOL_SPEC** — the :class:`~repro.serve.batch.BlockAllocator`
+  invariants (conservation, table/owner agreement, trash padding,
+  exclusivity, failed-ensure-changes-nothing) hold after *every* op of
+  *every* ensure/release sequence up to a fixed depth on a tiny allocator —
+  exhaustive, so a regression that leaks only on a rare interleaving still
+  fails deterministically.
+* **TRACE_FAIL** — every registered entry point (algorithm × mix, serve
+  chunks, data samplers) traces; produced by
+  :func:`repro.analysis.entrypoints.trace_all`, re-exported here for the
+  CLI.
+
+Every checker takes its subject as an argument (registry dict, allocator
+factory) so the self-test corpus can feed deliberately broken
+implementations and assert the rule fires.
+"""
+from __future__ import annotations
+
+import copy
+import inspect
+import itertools
+from typing import Callable
+
+from repro.analysis.findings import Finding
+
+_MIX_PATH = "src/repro/core/engine.py"
+_TOPO_PATH = "src/repro/core/topology.py"
+_POOL_PATH = "src/repro/serve/batch.py"
+
+
+# ---------------------------------------------------------------------------
+# Stateful-mix protocol
+# ---------------------------------------------------------------------------
+
+def _arity_ok(fn: Callable, n: int) -> bool:
+    """Can ``fn`` be called with ``n`` positional arguments?"""
+    try:
+        sig = inspect.signature(fn)
+    except (TypeError, ValueError):
+        return True  # builtins etc. — give the benefit of the doubt
+    positional = 0
+    has_var = False
+    for p in sig.parameters.values():
+        if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD):
+            positional += 1
+        elif p.kind == p.VAR_POSITIONAL:
+            has_var = True
+        elif p.kind == p.KEYWORD_ONLY and p.default is p.empty:
+            return False
+    required = sum(
+        1 for p in sig.parameters.values()
+        if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD)
+        and p.default is p.empty)
+    return required <= n and (has_var or positional >= n)
+
+
+def check_mix_protocol(mixes: dict[str, object] | None = None,
+                       ) -> list[Finding]:
+    """``mixes``: name -> built mix instance; default: build every
+    registered backend at K=4."""
+    if mixes is None:
+        from repro.core.engine import MIX_BACKENDS, make_mix
+        mixes = {}
+        out: list[Finding] = []
+        for name in sorted(MIX_BACKENDS):
+            try:
+                mixes[name] = make_mix(name, K=4)
+            except Exception as e:
+                out.append(Finding(
+                    rule="MIX_PROTOCOL", path=_MIX_PATH, line=0,
+                    message=f"mix backend {name!r} failed to build at K=4: "
+                            f"{e}"))
+    else:
+        out = []
+
+    protocol = {"state0": 2, "bind": 1, "apply": 2}
+    for name, mix in sorted(mixes.items()):
+        if not callable(mix):
+            out.append(Finding(
+                rule="MIX_PROTOCOL", path=_MIX_PATH, line=0,
+                message=f"mix backend {name!r} is not callable — the "
+                        "engine's t=0 init calls the stateless form"))
+        stateful = bool(getattr(mix, "stateful", False))
+        present = {m for m in protocol if callable(getattr(mix, m, None))}
+        if stateful:
+            for member, arity in protocol.items():
+                fn = getattr(mix, member, None)
+                if not callable(fn):
+                    out.append(Finding(
+                        rule="MIX_PROTOCOL", path=_MIX_PATH, line=0,
+                        message=f"stateful mix {name!r} is missing "
+                                f"{member}() — the engine cannot seed or "
+                                "thread its carry"))
+                elif not _arity_ok(fn, arity):
+                    out.append(Finding(
+                        rule="MIX_PROTOCOL", path=_MIX_PATH, line=0,
+                        message=f"stateful mix {name!r}: {member}() does "
+                                f"not accept {arity} positional "
+                                "argument(s)"))
+        elif present:
+            out.append(Finding(
+                rule="MIX_PROTOCOL", path=_MIX_PATH, line=0,
+                message=f"mix {name!r} defines {sorted(present)} but does "
+                        "not declare stateful=True — the engine will never "
+                        "thread its carry"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Topology Assumption 1
+# ---------------------------------------------------------------------------
+
+def check_topologies(builders: dict[str, Callable] | None = None,
+                     probe_K: int = 4) -> list[Finding]:
+    if builders is None:
+        from repro.core.topology import REGISTRY, torus2d
+        builders = dict(REGISTRY)
+        builders["torus2d"] = lambda K: torus2d(2, K // 2)
+    out = []
+    for name, build in sorted(builders.items()):
+        try:
+            topo = build(probe_K)
+            topo.check_assumption1()
+        except Exception as e:
+            out.append(Finding(
+                rule="W_STOCHASTIC", path=_TOPO_PATH, line=0,
+                message=f"topology {name!r} at K={probe_K} violates "
+                        f"Assumption 1: {e}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# BlockAllocator spec (exhaustive op-sequence enumeration)
+# ---------------------------------------------------------------------------
+
+def _allocator_invariants(a, label: str) -> str | None:
+    """None when all invariants hold, else a description of the violation."""
+    owned_total = sum(a.owned(s) for s in range(a.max_batch))
+    if a.free_blocks + owned_total != a.num_blocks:
+        return (f"{label}: conservation broken — free({a.free_blocks}) + "
+                f"owned({owned_total}) != num_blocks({a.num_blocks})")
+    seen: dict[int, int] = {}
+    for s in range(a.max_batch):
+        cnt = a.owned(s)
+        live = [int(b) for b in a.tables[s, :cnt]]
+        for b in live:
+            if not 0 <= b < a.num_blocks:
+                return f"{label}: slot {s} table holds invalid block {b}"
+            if a._owner[b] != s:
+                return (f"{label}: agreement broken — tables[{s}] holds "
+                        f"block {b} but owner map says {a._owner[b]}")
+            if b in seen:
+                return (f"{label}: exclusivity broken — block {b} in both "
+                        f"slot {seen[b]} and slot {s} tables")
+            seen[b] = s
+        tail = [int(b) for b in a.tables[s, cnt:]]
+        if any(b != a.trash for b in tail):
+            return (f"{label}: trash padding broken — tables[{s}, {cnt}:] "
+                    f"= {tail}, expected all {a.trash}")
+    for b in a._free:
+        if a._owner[b] != -1:
+            return (f"{label}: free list holds block {b} with owner "
+                    f"{a._owner[b]}")
+    if len(set(a._free)) != len(a._free):
+        return f"{label}: free list has duplicates"
+    return None
+
+
+def _alloc_state(a):
+    return (tuple(a._free), tuple(a._owner.tolist()),
+            tuple(a._count.tolist()), a.tables.tobytes())
+
+
+def check_blockpool_spec(factory: Callable[[], object] | None = None,
+                         depth: int = 4, max_findings: int = 5,
+                         ) -> list[Finding]:
+    """Enumerate every op sequence up to ``depth`` on a tiny allocator and
+    check the invariants after each op. ``factory`` builds a fresh
+    allocator; injectable so the self-test corpus can verify broken
+    implementations are flagged."""
+    if factory is None:
+        from repro.serve.batch import BlockAllocator
+        factory = lambda: BlockAllocator(num_blocks=4, block_size=2,
+                                         max_batch=2, capacity=4)
+    probe = factory()
+    slots = range(probe.max_batch)
+    tokens = sorted({1, probe.block_size + 1,
+                     probe.max_blocks * probe.block_size * 2})
+    ops = ([("ensure", s, n) for s in slots for n in tokens]
+           + [("release", s) for s in slots])
+
+    out: list[Finding] = []
+
+    def run(seq) -> None:
+        a = factory()
+        err = _allocator_invariants(a, "init")
+        if err is None:
+            for i, op in enumerate(seq):
+                label = "; ".join(f"{o[0]}{o[1:]}" for o in seq[:i + 1])
+                try:
+                    if op[0] == "ensure":
+                        before = (copy.deepcopy(a), _alloc_state(a))
+                        ok = a.ensure(op[1], op[2])
+                        if not ok and _alloc_state(a) != before[1]:
+                            err = (f"{label}: failed ensure mutated state")
+                            break
+                    else:
+                        a.release(op[1])
+                        if a.owned(op[1]) != 0:
+                            err = f"{label}: release left owned() != 0"
+                            break
+                except Exception as e:
+                    err = f"{label}: raised {type(e).__name__}: {e}"
+                    break
+                err = _allocator_invariants(a, label)
+                if err is not None:
+                    break
+        if err is not None:
+            out.append(Finding(
+                rule="BLOCKPOOL_SPEC", path=_POOL_PATH, line=0,
+                message=f"allocator spec violated after [{err}]"))
+
+    for d in range(1, depth + 1):
+        for seq in itertools.product(ops, repeat=d):
+            run(seq)
+            if len(out) >= max_findings:
+                return out
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Aggregate
+# ---------------------------------------------------------------------------
+
+def check_all() -> list[Finding]:
+    """Registry-level contracts (mix protocol, topologies, allocator spec).
+    Entry-point tracing (TRACE_FAIL) runs via entrypoints.trace_all."""
+    return (check_mix_protocol() + check_topologies()
+            + check_blockpool_spec())

@@ -1,0 +1,243 @@
+"""Registered entry points the jaxpr linter and contract checker trace.
+
+One :class:`EntryPoint` per traceable program: every ``ALGORITHMS × MIX``
+combo driven through the real :class:`~repro.core.engine.Engine` chunk
+builder, the ``serve/steps.py`` fused/paged decode chunks, and the
+``data/lm.py`` device samplers — all at abstract, reduced shapes so tracing
+is cheap and runs on any backend. Nothing here executes a compiled program:
+the builders hand back ``(fn, args)`` where ``args`` are
+``jax.ShapeDtypeStruct`` trees (or tiny concrete arrays feeding
+``jax.make_jaxpr``).
+
+Entries carry an ``allow={RULE: reason}`` map for findings that are *by
+design* (VRDBO's STORM estimator evaluates the step at two iterates under
+common randomness — the same keys on purpose; gt_sgd carries the bilevel
+state slots its single-level update never touches). Allowed findings are
+reported as suppressed with the reason, never silently dropped.
+
+Combos that need more devices than present (shard-local mixes want one node
+per mesh shard) are *skipped with a record*, not failed — the CLI prints
+them so CI logs show exactly what was not covered.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Tree = Any
+
+# mixes that run the algorithm body under shard_map need a mesh with one
+# node per shard — skip (with record) when the host lacks the devices
+SHARD_LOCAL_MIXES = ("ring_local",)
+
+_STORM_REASON = (
+    "VRDBO/STORM evaluates the hypergradient at consecutive iterates under "
+    "common randomness — the SAME minibatch keys at both points is the "
+    "estimator's definition (PAPER.md Eq. 10), not a bug")
+_GT_SGD_REASON = (
+    "gt_sgd is the single-level gradient-tracking baseline run through the "
+    "bilevel state container; the u/zf slots are inert by construction and "
+    "kept so every algorithm shares one carry structure")
+
+
+@dataclasses.dataclass(frozen=True)
+class EntryPoint:
+    name: str
+    build: Callable[[], tuple[Callable, tuple]]
+    allow: dict[str, str] = dataclasses.field(default_factory=dict)
+    tags: tuple[str, ...] = ()
+
+
+class SkipEntry(Exception):
+    """Raised by a builder when the environment cannot trace this entry."""
+
+
+def _sds(tree: Tree) -> Tree:
+    return jax.tree.map(
+        lambda l: l if isinstance(l, jax.ShapeDtypeStruct)
+        else jax.ShapeDtypeStruct(jnp.shape(l), jnp.result_type(l)), tree)
+
+
+def _key_sds(*lead: int):
+    return jax.ShapeDtypeStruct((*lead, 2), np.uint32)
+
+
+# ---------------------------------------------------------------------------
+# Engine: every algorithm × mix combo through the real fused chunk
+# ---------------------------------------------------------------------------
+
+def _engine_build(algo: str, mix: str):
+    def build():
+        from repro.core.common import HParams
+        from repro.core.engine import Engine
+        from repro.core.hypergrad import HypergradConfig
+        from repro.core.problems import logreg_hyperopt
+        from repro.core.topology import ring
+        from repro.data.synthetic import (make_classification,
+                                          make_device_sampler,
+                                          shard_to_nodes, train_val_split)
+        K, D, J, steps = 4, 8, 2, 3
+        if mix in SHARD_LOCAL_MIXES and jax.device_count() < K:
+            raise SkipEntry(
+                f"mix {mix!r} runs under shard_map and needs >= {K} devices "
+                f"(have {jax.device_count()})")
+        ds = make_classification(n=64, d=D, c=2, seed=0)
+        tr, va = train_val_split(ds)
+        sampler = make_device_sampler(shard_to_nodes(tr, K),
+                                      shard_to_nodes(va, K), batch=4, J=J)
+        prob = logreg_hyperopt(d=D, c=2, lip_gy=5.0)
+        cfg = HypergradConfig(J=J, lip_gy=5.0, randomize=True)
+        eng = Engine(prob, cfg, HParams(), ring(K), algo=algo, mix=mix,
+                     donate=False)
+
+        key = jax.random.PRNGKey(0)
+        kx, ky, k0 = jax.random.split(key, 3)
+        X0 = jax.tree.map(lambda l: jnp.stack([l] * K), prob.init_x(kx))
+        Y0 = jax.tree.map(lambda l: jnp.stack([l] * K), prob.init_y(ky))
+        kb0, kn0 = jax.random.split(k0)
+        b0, nk0 = sampler(kb0), jax.random.split(kn0, K)
+        state = jax.eval_shape(eng._init_body, X0, Y0, b0, nk0)
+        carry = ((state, tuple(eng._mix_state0(state, b0, nk0)))
+                 if eng._mix_stateful else state)
+        chunk = eng._make_chunk(sampler, host=False)
+        return chunk, (_sds(carry), _key_sds(steps), _key_sds(steps))
+
+    allow = {}
+    if algo == "vrdbo":
+        allow["KEY_REUSE"] = _STORM_REASON
+    if algo == "gt_sgd":
+        allow["DEAD_CARRY"] = _GT_SGD_REASON
+    return EntryPoint(name=f"engine:{algo}x{mix}", build=build, allow=allow,
+                      tags=("engine", algo, mix))
+
+
+# ---------------------------------------------------------------------------
+# Serving: fused and paged decode chunks at a reduced dense config
+# ---------------------------------------------------------------------------
+
+def _tiny_model_cfg():
+    from repro.configs import get
+    return get("smollm-360m").reduced().with_overrides(
+        d_model=32, n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64, vocab=64)
+
+
+def _serve_fused_build():
+    from repro.models import init_params
+    from repro.serve.batch import init_slot_cache, slot_axes
+    from repro.serve.steps import make_fused_decode
+    cfg = _tiny_model_cfg()
+    B, capacity, chunk_len = 2, 32, 4
+    params = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    cache = jax.eval_shape(lambda: init_slot_cache(cfg, B, capacity))
+    axes = slot_axes(cfg, capacity)
+    fn = make_fused_decode(cfg, axes, chunk_len, eos_id=2)
+    tok = jax.ShapeDtypeStruct((B,), np.int32)
+    live = jax.ShapeDtypeStruct((B,), np.bool_)
+    rem = jax.ShapeDtypeStruct((B,), np.int32)
+    return fn, (_sds(params), tok, _sds(cache), live, rem)
+
+
+def _serve_paged_build():
+    from repro.models import init_params
+    from repro.serve.batch import BlockPool
+    from repro.serve.steps import make_paged_decode
+    cfg = _tiny_model_cfg()
+    B, capacity, block_size, chunk_len = 2, 32, 8, 4
+    pool = BlockPool(cfg, num_blocks=B * capacity // block_size,
+                     block_size=block_size, max_batch=B, capacity=capacity)
+    fn = make_paged_decode(cfg, pool.batch_axes, pool.cap_axes, block_size,
+                           chunk_len, eos_id=2)
+    params = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    tok = jax.ShapeDtypeStruct((B,), np.int32)
+    tables = jax.ShapeDtypeStruct((B, pool.max_blocks), np.int32)
+    idx = jax.ShapeDtypeStruct((B,), np.int32)
+    live = jax.ShapeDtypeStruct((B,), np.bool_)
+    rem = jax.ShapeDtypeStruct((B,), np.int32)
+    return fn, (_sds(params), tok, _sds(pool.data), tables, idx, live, rem)
+
+
+# ---------------------------------------------------------------------------
+# Data: device-resident samplers per model family
+# ---------------------------------------------------------------------------
+
+def _data_build(arch: str, **overrides):
+    def build():
+        from repro.configs import get
+        from repro.data.lm import make_lm_step_batch
+        cfg = get(arch).reduced().with_overrides(
+            d_model=16, n_heads=2, n_kv_heads=2, head_dim=8, d_ff=32,
+            vocab=32, **overrides)
+        fn = lambda key: make_lm_step_batch(cfg, key, K=2, per_node=2,
+                                            seq=8, J=2)
+        return fn, (_key_sds(),)
+    return build
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def iter_entries(tags: tuple[str, ...] | None = None) -> list[EntryPoint]:
+    from repro.core.engine import ALGORITHMS, MIX_BACKENDS
+    entries: list[EntryPoint] = []
+    for algo in sorted(ALGORITHMS):
+        for mix in sorted(MIX_BACKENDS):
+            entries.append(_engine_build(algo, mix))
+    entries.append(EntryPoint(name="serve:fused_decode",
+                              build=_serve_fused_build, tags=("serve",)))
+    entries.append(EntryPoint(name="serve:paged_decode",
+                              build=_serve_paged_build, tags=("serve",)))
+    for arch, kw in (("smollm-360m", {}),
+                     ("chameleon-34b", {"n_img_tokens": 4}),
+                     ("whisper-tiny", {"src_len": 8})):
+        entries.append(EntryPoint(name=f"data:lm_step_batch:{arch}",
+                                  build=_data_build(arch, **kw),
+                                  tags=("data", arch)))
+    if tags:
+        entries = [e for e in entries if set(tags) & set(e.tags)]
+    return entries
+
+
+def trace_entry(entry: EntryPoint):
+    """Trace one entry; returns (findings, allowed) — SkipEntry propagates."""
+    from repro.analysis.findings import Finding
+    from repro.analysis.jaxpr_lint import lint_callable
+    try:
+        fn, args = entry.build()
+        findings = lint_callable(fn, *args, entry=entry.name)
+    except SkipEntry:
+        raise
+    except Exception as e:  # noqa: BLE001 — any trace failure IS the finding
+        msg = str(e).splitlines()[0][:300] if str(e) else type(e).__name__
+        return [Finding(rule="TRACE_FAIL", path="", line=0,
+                        message=f"[{entry.name}] failed to trace: {msg}")], []
+    kept, allowed = [], []
+    for f in findings:
+        reason = entry.allow.get(f.rule)
+        if reason is not None:
+            allowed.append((f, reason))
+        else:
+            kept.append(f)
+    return kept, allowed
+
+
+def trace_all(entries: list[EntryPoint] | None = None):
+    """Lint every entry. Returns (findings, allowed, skipped)."""
+    if entries is None:
+        entries = iter_entries()
+    findings, allowed, skipped = [], [], []
+    for e in entries:
+        try:
+            f, a = trace_entry(e)
+        except SkipEntry as s:
+            skipped.append(f"{e.name}: {s}")
+            continue
+        findings.extend(f)
+        allowed.extend(a)
+    return findings, allowed, skipped

@@ -1,0 +1,242 @@
+"""Findings model shared by every analysis engine.
+
+A :class:`Finding` is one rule violation at one location. Identity for
+baseline/dedup purposes is the ``(rule, path, message)`` triple — line numbers
+drift with every edit, so they are carried for display but excluded from the
+fingerprint (the message embeds the stable context: entry-point name, carry
+leaf path, variable name, ...).
+
+Suppressions:
+
+* ``# repro: noqa[RULE] reason`` on the finding's line (or
+  ``# repro: noqa-file[RULE] reason`` anywhere in the file) suppresses it.
+  The reason string is REQUIRED — an empty reason is itself a finding
+  (``BAD_NOQA``), so suppressions stay auditable.
+* Entry points may carry an ``allow={RULE: reason}`` map for violations that
+  have no single source line (e.g. a dead scan carry introduced by a whole
+  algorithm's state shape). Allowed findings are reported as suppressed, not
+  dropped silently.
+
+The baseline file is JSON: ``{"version": 1, "findings": [...]}``, written by
+``--write-baseline`` and compared by ``--baseline`` (property-tested to
+round-trip in tests/test_analysis.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import io
+import json
+import os
+import re
+import tokenize
+
+NOQA_RE = re.compile(
+    r"#\s*repro:\s*(noqa(?:-file)?)\[([A-Za-z0-9_,\s]+)\]\s*(.*?)\s*$")
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    rule: str
+    path: str        # repo-relative, "/"-separated; "" when not file-bound
+    line: int        # 1-based; 0 = unknown/not file-bound
+    message: str
+
+    @property
+    def fingerprint(self) -> tuple[str, str, str]:
+        return (self.rule, self.path, self.message)
+
+    def render(self) -> str:
+        loc = self.path or "<registry>"
+        if self.line:
+            loc += f":{self.line}"
+        return f"{loc}: {self.rule}: {self.message}"
+
+    def to_json(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "message": self.message}
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Finding":
+        return cls(rule=str(d["rule"]), path=str(d["path"]),
+                   line=int(d.get("line", 0)), message=str(d["message"]))
+
+
+@dataclasses.dataclass(frozen=True)
+class Suppression:
+    """One parsed ``# repro: noqa[...]`` comment.
+
+    A comment on its own line (``standalone``) suppresses findings on the
+    *next* line — the escape hatch for statements too long to annotate
+    inline. Trailing comments suppress their own line.
+    """
+
+    path: str
+    line: int
+    rules: tuple[str, ...]
+    reason: str
+    file_level: bool
+    standalone: bool = False
+
+    @property
+    def target_line(self) -> int:
+        return self.line + 1 if self.standalone else self.line
+
+
+def _comment_lines(text: str):
+    """(lineno, comment, standalone) for real COMMENT tokens — a noqa
+    spelled inside a docstring (e.g. this module's docs) is documentation,
+    not a suppression."""
+    try:
+        tokens = list(tokenize.generate_tokens(io.StringIO(text).readline))
+    except (tokenize.TokenError, SyntaxError, IndentationError):
+        # not valid python (fixtures, snippets): fall back to raw lines
+        for lineno, line in enumerate(text.splitlines(), start=1):
+            if "#" in line:
+                yield lineno, line, line.lstrip().startswith("#")
+        return
+    for tok in tokens:
+        if tok.type == tokenize.COMMENT:
+            yield (tok.start[0], tok.string,
+                   tok.line.lstrip().startswith("#"))
+
+
+def parse_suppressions(text: str, path: str) -> list[Suppression]:
+    out = []
+    for lineno, comment, standalone in _comment_lines(text):
+        m = NOQA_RE.search(comment)
+        if not m:
+            continue
+        rules = tuple(r.strip() for r in m.group(2).split(",") if r.strip())
+        out.append(Suppression(path=path, line=lineno, rules=rules,
+                               reason=m.group(3).strip(),
+                               file_level=m.group(1) == "noqa-file",
+                               standalone=standalone))
+    return out
+
+
+def apply_suppressions(findings: list[Finding], sups: list[Suppression],
+                       ) -> tuple[list[Finding], list[tuple[Finding, str]]]:
+    """Split findings into (kept, suppressed-with-reason).
+
+    Suppressions with an empty reason do not suppress anything — they are
+    converted into BAD_NOQA findings by :func:`noqa_findings` instead.
+    """
+    by_line: dict[tuple[str, int], list[Suppression]] = {}
+    by_file: dict[str, list[Suppression]] = {}
+    for s in sups:
+        if not s.reason:
+            continue
+        if s.file_level:
+            by_file.setdefault(s.path, []).append(s)
+        else:
+            by_line.setdefault((s.path, s.target_line), []).append(s)
+
+    kept: list[Finding] = []
+    suppressed: list[tuple[Finding, str]] = []
+    for f in findings:
+        hit = None
+        for s in by_line.get((f.path, f.line), []):
+            if f.rule in s.rules:
+                hit = s
+                break
+        if hit is None:
+            for s in by_file.get(f.path, []):
+                if f.rule in s.rules:
+                    hit = s
+                    break
+        if hit is None:
+            kept.append(f)
+        else:
+            suppressed.append((f, hit.reason))
+    return kept, suppressed
+
+
+def noqa_findings(sups: list[Suppression], known_rules) -> list[Finding]:
+    """BAD_NOQA findings: empty reasons and unknown rule names."""
+    out = []
+    for s in sups:
+        if not s.reason:
+            out.append(Finding(
+                rule="BAD_NOQA", path=s.path, line=s.line,
+                message=f"noqa[{','.join(s.rules)}] has no reason — a "
+                        "suppression must say why it is safe"))
+        for r in s.rules:
+            if r not in known_rules:
+                out.append(Finding(
+                    rule="BAD_NOQA", path=s.path, line=s.line,
+                    message=f"noqa names unknown rule {r!r}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Baseline io
+# ---------------------------------------------------------------------------
+
+BASELINE_VERSION = 1
+
+
+def save_baseline(findings: list[Finding], path: str) -> None:
+    unique = {f.fingerprint: f for f in findings}
+    payload = {"version": BASELINE_VERSION,
+               "findings": [f.to_json() for f in sorted(unique.values())]}
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2, sort_keys=True)
+        fh.write("\n")
+
+
+def load_baseline(path: str) -> list[Finding]:
+    if not os.path.exists(path):
+        return []
+    with open(path) as fh:
+        payload = json.load(fh)
+    if payload.get("version") != BASELINE_VERSION:
+        raise ValueError(f"{path}: unsupported baseline version "
+                         f"{payload.get('version')!r}")
+    return [Finding.from_json(d) for d in payload["findings"]]
+
+
+def diff_baseline(findings: list[Finding], baseline: list[Finding],
+                  ) -> tuple[list[Finding], list[Finding]]:
+    """(new findings not in baseline, stale baseline entries not found)."""
+    base = {f.fingerprint for f in baseline}
+    now = {f.fingerprint for f in findings}
+    new = [f for f in findings if f.fingerprint not in base]
+    stale = [f for f in baseline if f.fingerprint not in now]
+    return new, stale
+
+
+# ---------------------------------------------------------------------------
+# Report rendering
+# ---------------------------------------------------------------------------
+
+def render_report(findings: list[Finding],
+                  suppressed: list[tuple[Finding, str]] | None = None,
+                  skipped: list[str] | None = None) -> str:
+    lines = []
+    for f in sorted(findings):
+        lines.append(f.render())
+    for f, reason in sorted(suppressed or []):
+        lines.append(f"suppressed: {f.render()}  [noqa: {reason}]")
+    for s in skipped or []:
+        lines.append(f"skipped: {s}")
+    n = len(findings)
+    lines.append(f"{n} finding(s)" if n else "analysis OK: 0 findings")
+    return "\n".join(lines)
+
+
+def report_json(findings: list[Finding],
+                suppressed: list[tuple[Finding, str]],
+                skipped: list[str],
+                new: list[Finding] | None = None,
+                stale: list[Finding] | None = None) -> dict:
+    out = {
+        "findings": [f.to_json() for f in sorted(findings)],
+        "suppressed": [{**f.to_json(), "reason": r}
+                       for f, r in sorted(suppressed)],
+        "skipped": list(skipped),
+    }
+    if new is not None:
+        out["new_vs_baseline"] = [f.to_json() for f in sorted(new)]
+    if stale is not None:
+        out["stale_baseline"] = [f.to_json() for f in sorted(stale)]
+    return out

@@ -36,8 +36,12 @@ def lm_batch_extras(cfg: ModelConfig, key, batch: int, seq: int):
 
 
 def make_node_batch(cfg: ModelConfig, key, per_node: int, seq: int):
-    b = lm_batch(key, cfg.vocab, per_node, seq)
-    b.update(lm_batch_extras(cfg, key, per_node, seq))
+    # tokens and modality extras draw from independent subkeys: feeding one
+    # key to both correlates the token stream with the vision/audio stubs
+    # (flagged by `python -m repro.analysis` as KEY_REUSE)
+    kt, ke = jax.random.split(key)
+    b = lm_batch(kt, cfg.vocab, per_node, seq)
+    b.update(lm_batch_extras(cfg, ke, per_node, seq))
     return b
 
 

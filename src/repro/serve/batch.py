@@ -166,64 +166,38 @@ def scatter_token(pool_data, writes, blk, off):
         lambda p, w: p.at[blk, off].set(w.astype(p.dtype)), pool_data, writes)
 
 
-class BlockPool:
-    """Physical paged KV cache + host-side block allocator.
+class BlockAllocator:
+    """Pure host-side paged-KV block allocator: free list + owner map +
+    per-slot block tables. No device state — exactly the part of
+    :class:`BlockPool` that ``repro.analysis.contracts`` model-checks by
+    enumerating every ensure/release sequence on a tiny instance.
 
-    Device side: ``.data`` — one ``[num_blocks + 1, block_size, *rest]``
-    array per per-token cache tensor (index ``num_blocks`` is the trash
-    block). Host side: a free list, an owner map, and per-slot
-    ``[max_blocks]`` int32 block tables (``.tables``; unallocated entries
-    point at trash). Allocation is exact — a slot owns
-    ``ceil(tokens / block_size)`` blocks — and checked: double allocation or
-    foreign frees raise immediately, and after a full drain
-    ``free_blocks == num_blocks`` (the leak invariant the property tests
-    pin).
+    Invariants after every public op (the checkable spec):
+
+    1. conservation — ``free_blocks + sum(owned) == num_blocks``;
+    2. agreement — ``tables[slot, :owned(slot)]`` are exactly the blocks
+       whose owner is ``slot``;
+    3. trash padding — ``tables[slot, owned(slot):]`` all point at the
+       trash block;
+    4. exclusivity — no block appears in two slots' live table prefixes or
+       in both a live prefix and the free list;
+    5. a failed ``ensure`` (returning False) changes nothing.
     """
 
-    def __init__(self, cfg: ModelConfig, *, num_blocks: int, block_size: int,
-                 max_batch: int, capacity: int, params=None):
+    def __init__(self, *, num_blocks: int, block_size: int, max_batch: int,
+                 capacity: int):
         if capacity % block_size:
             raise ValueError(f"capacity {capacity} must be a multiple of "
                              f"block_size {block_size}")
-        self.cfg = cfg
         self.num_blocks, self.block_size = num_blocks, block_size
         self.max_batch, self.capacity = max_batch, capacity
         self.max_blocks = capacity // block_size
-
-        axes_b = cache_batch_axes(cfg, capacity, params=params)
-        axes_c = cache_capacity_axes(cfg, capacity, params=params)
-        self.batch_axes = _strip_idx(axes_b)
-        self.cap_axes = _strip_idx(axes_c)
-        bad = [b_c for b_c in zip(jax.tree.leaves(self.batch_axes),
-                                  jax.tree.leaves(self.cap_axes))
-               if b_c[0] < 0 or b_c[1] < 0]
-        if bad or not jax.tree.leaves(self.cap_axes):
-            raise ValueError(
-                f"family {cfg.family!r} has cache leaves without a "
-                "(batch, capacity) axis pair — paged KV needs every "
-                "per-token tensor to grow with capacity")
-
-        shapes = jax.eval_shape(
-            lambda p: init_cache(cfg, 1, capacity, params=p), params)
-
-        def phys(leaf, b, c):
-            assert leaf.shape[c] == capacity, (leaf.shape, c)
-            rest = tuple(s for ax, s in enumerate(leaf.shape)
-                         if ax not in (b, c))
-            return jnp.zeros((num_blocks + 1, block_size) + rest, leaf.dtype)
-
-        self.data = jax.tree.map(phys, _strip_idx(dict(shapes)),
-                                 self.batch_axes, self.cap_axes)
-
-        # host allocator state
         self.trash = num_blocks
         self.tables = np.full((max_batch, self.max_blocks), self.trash,
                               np.int32)
         self._free: list[int] = list(range(num_blocks - 1, -1, -1))
         self._owner = np.full(num_blocks, -1, np.int64)
         self._count = np.zeros(max_batch, np.int64)
-
-    # -- allocator -----------------------------------------------------------
 
     @property
     def free_blocks(self) -> int:
@@ -272,3 +246,101 @@ class BlockPool:
             self._free.append(blk)
         self.tables[slot, :] = self.trash
         self._count[slot] = 0
+
+
+class BlockPool:
+    """Physical paged KV cache + host-side block allocator.
+
+    Device side: ``.data`` — one ``[num_blocks + 1, block_size, *rest]``
+    array per per-token cache tensor (index ``num_blocks`` is the trash
+    block). Host side: a :class:`BlockAllocator` (free list, owner map,
+    per-slot ``[max_blocks]`` int32 block tables, exposed unchanged as
+    ``.tables`` etc.; unallocated entries point at trash). Allocation is
+    exact — a slot owns ``ceil(tokens / block_size)`` blocks — and checked:
+    double allocation or foreign frees raise immediately, and after a full
+    drain ``free_blocks == num_blocks`` (the leak invariant the property
+    tests pin).
+    """
+
+    def __init__(self, cfg: ModelConfig, *, num_blocks: int, block_size: int,
+                 max_batch: int, capacity: int, params=None):
+        self.alloc = BlockAllocator(num_blocks=num_blocks,
+                                    block_size=block_size,
+                                    max_batch=max_batch, capacity=capacity)
+        self.cfg = cfg
+        self.num_blocks, self.block_size = num_blocks, block_size
+        self.max_batch, self.capacity = max_batch, capacity
+        self.max_blocks = self.alloc.max_blocks
+
+        axes_b = cache_batch_axes(cfg, capacity, params=params)
+        axes_c = cache_capacity_axes(cfg, capacity, params=params)
+        self.batch_axes = _strip_idx(axes_b)
+        self.cap_axes = _strip_idx(axes_c)
+        bad = [b_c for b_c in zip(jax.tree.leaves(self.batch_axes),
+                                  jax.tree.leaves(self.cap_axes))
+               if b_c[0] < 0 or b_c[1] < 0]
+        if bad or not jax.tree.leaves(self.cap_axes):
+            raise ValueError(
+                f"family {cfg.family!r} has cache leaves without a "
+                "(batch, capacity) axis pair — paged KV needs every "
+                "per-token tensor to grow with capacity")
+
+        shapes = jax.eval_shape(
+            lambda p: init_cache(cfg, 1, capacity, params=p), params)
+
+        def phys(leaf, b, c):
+            assert leaf.shape[c] == capacity, (leaf.shape, c)
+            rest = tuple(s for ax, s in enumerate(leaf.shape)
+                         if ax not in (b, c))
+            return jnp.zeros((num_blocks + 1, block_size) + rest, leaf.dtype)
+
+        self.data = jax.tree.map(phys, _strip_idx(dict(shapes)),
+                                 self.batch_axes, self.cap_axes)
+
+    # -- allocator (delegates to BlockAllocator; attribute layout kept) ------
+
+    @property
+    def trash(self) -> int:
+        return self.alloc.trash
+
+    @property
+    def tables(self) -> np.ndarray:
+        return self.alloc.tables
+
+    @property
+    def _free(self) -> list[int]:
+        return self.alloc._free
+
+    @property
+    def _owner(self) -> np.ndarray:
+        return self.alloc._owner
+
+    @property
+    def _count(self) -> np.ndarray:
+        return self.alloc._count
+
+    @property
+    def free_blocks(self) -> int:
+        return self.alloc.free_blocks
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return self.alloc.blocks_for(n_tokens)
+
+    def can_fit(self, n_tokens: int) -> bool:
+        """Would a *fresh* slot holding ``n_tokens`` fit right now?"""
+        return self.alloc.can_fit(n_tokens)
+
+    def owned(self, slot: int) -> int:
+        return self.alloc.owned(slot)
+
+    def ensure(self, slot: int, n_tokens: int) -> bool:
+        """Grow ``slot``'s table until it covers ``n_tokens`` positions.
+
+        Returns False (allocating nothing) when the free list cannot cover
+        the growth — the caller preempts and retries. Coverage is capped at
+        ``capacity`` (the table length)."""
+        return self.alloc.ensure(slot, n_tokens)
+
+    def release(self, slot: int) -> None:
+        """Free every block the slot owns and reset its table to trash."""
+        self.alloc.release(slot)

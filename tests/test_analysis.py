@@ -1,0 +1,597 @@
+"""Self-test corpus for repro.analysis: every rule must flag its minimal
+positive fixture and pass the fixed form.
+
+The KEY_REUSE positives include a fixture copy of the PR 1 run-loop bug (one
+key seeding both the batch draw and the J̃ draw) and of the vlm/audio
+``make_node_batch`` bug fixed in this PR; the MIX_PROTOCOL positive deletes
+``state0`` from a fixture stateful mix — the acceptance scenarios for the
+static-analysis suite.
+"""
+import json
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.ast_rules import lint_source
+from repro.analysis.catalogue import RULES, explain
+from repro.analysis.contracts import (check_blockpool_spec,
+                                      check_mix_protocol, check_topologies)
+from repro.analysis.findings import (Finding, apply_suppressions,
+                                     diff_baseline, load_baseline,
+                                     noqa_findings, parse_suppressions,
+                                     save_baseline)
+from repro.analysis.jaxpr_lint import lint_callable
+
+
+def rules_of(findings):
+    return {f.rule for f in findings}
+
+
+# ---------------------------------------------------------------------------
+# KEY_REUSE (jaxpr)
+# ---------------------------------------------------------------------------
+
+def test_key_reuse_pr1_runloop_bug_flagged():
+    """Fixture reintroduction of the PR 1 bug: one key drives both the
+    minibatch draw and the J̃ truncation draw."""
+    def step(key, x):
+        batch = jax.random.normal(key, (4,))
+        jt = jax.random.randint(key, (), 0, 10)
+        return x + batch.sum() * jt
+
+    found = lint_callable(step, jax.ShapeDtypeStruct((2,), np.uint32),
+                          jax.ShapeDtypeStruct((), np.float32))
+    assert "KEY_REUSE" in rules_of(found)
+
+
+def test_key_reuse_pr1_fixed_form_clean():
+    def step(key, x):
+        kb, kj = jax.random.split(key)
+        batch = jax.random.normal(kb, (4,))
+        jt = jax.random.randint(kj, (), 0, 10)
+        return x + batch.sum() * jt
+
+    found = lint_callable(step, jax.ShapeDtypeStruct((2,), np.uint32),
+                          jax.ShapeDtypeStruct((), np.float32))
+    assert found == []
+
+
+def test_key_reuse_through_scan_carry():
+    """A carried key consumed in the body AND passed through unchanged is
+    reused every iteration."""
+    def run(key):
+        def body(k, _):
+            draw = jax.random.normal(k, (2,))
+            return k, draw  # same key forwarded to the next iteration
+
+        _, draws = jax.lax.scan(body, key, None, length=3)
+        return draws
+
+    found = lint_callable(run, jax.ShapeDtypeStruct((2,), np.uint32))
+    assert "KEY_REUSE" in rules_of(found)
+
+
+def test_key_reuse_scan_carry_split_clean():
+    def run(key):
+        def body(k, _):
+            k, sub = jax.random.split(k)
+            return k, jax.random.normal(sub, (2,))
+
+        _, draws = jax.lax.scan(body, key, None, length=3)
+        return draws
+
+    found = lint_callable(run, jax.ShapeDtypeStruct((2,), np.uint32))
+    assert found == []
+
+
+def test_key_reuse_loop_invariant_key_sampled_in_scan():
+    """A closed-over constant key sampled inside a scan body draws the same
+    value every iteration."""
+    def run(xs):
+        key = jax.random.PRNGKey(0)
+
+        def body(c, x):
+            return c + x * jax.random.normal(key, ()), None
+
+        return jax.lax.scan(body, jnp.float32(0), xs)[0]
+
+    found = lint_callable(run, jax.ShapeDtypeStruct((4,), np.float32))
+    assert "KEY_REUSE" in rules_of(found)
+
+
+def test_key_reuse_folded_key_in_scan_clean():
+    """fold_in with the loop-varying xs launders loop-invariance."""
+    def run(xs):
+        key = jax.random.PRNGKey(0)
+
+        def body(c, x):
+            k = jax.random.fold_in(key, x)
+            return c + jax.random.normal(k, ()), None
+
+        return jax.lax.scan(body, jnp.float32(0), xs)[0]
+
+    found = lint_callable(run, jax.ShapeDtypeStruct((4,), np.int32))
+    assert found == []
+
+
+def test_key_reuse_cond_branches_not_summed():
+    """Consumption in exclusive cond branches is max-merged, not summed."""
+    def run(key, p):
+        return jax.lax.cond(p > 0,
+                            lambda k: jax.random.normal(k, (2,)),
+                            lambda k: jax.random.uniform(k, (2,)), key)
+
+    found = lint_callable(run, jax.ShapeDtypeStruct((2,), np.uint32),
+                          jax.ShapeDtypeStruct((), np.float32))
+    assert found == []
+
+
+def test_make_node_batch_fix_regression():
+    """The vlm/audio batch builder draws tokens and modality extras from
+    independent subkeys (the bug this PR fixed)."""
+    from functools import partial
+
+    from repro.configs import get
+    from repro.data.lm import make_node_batch
+
+    for arch, kw in (("chameleon-34b", {"n_img_tokens": 4}),
+                     ("whisper-tiny", {"src_len": 8})):
+        cfg = get(arch).reduced().with_overrides(
+            d_model=16, n_heads=2, n_kv_heads=2, head_dim=8, d_ff=32,
+            vocab=32, **kw)
+        found = lint_callable(
+            partial(make_node_batch, cfg, per_node=2, seq=8),
+            jax.ShapeDtypeStruct((2,), np.uint32))
+        assert [f for f in found if f.rule == "KEY_REUSE"] == [], arch
+
+
+# ---------------------------------------------------------------------------
+# DEAD_CARRY / DTYPE_WIDEN (jaxpr)
+# ---------------------------------------------------------------------------
+
+def test_dead_carry_flagged_and_fixed():
+    def bad(xs):
+        def body(carry, x):
+            a, b = carry
+            return (a + x, b), None  # b never read, never written
+
+        return jax.lax.scan(body, (jnp.float32(0), jnp.zeros((3,))), xs)[0]
+
+    def good(xs):
+        def body(a, x):
+            return a + x, None
+
+        return jax.lax.scan(body, jnp.float32(0), xs)[0]
+
+    sds = jax.ShapeDtypeStruct((4,), np.float32)
+    assert "DEAD_CARRY" in rules_of(lint_callable(bad, sds))
+    assert lint_callable(good, sds) == []
+
+
+def test_dtype_widen_flagged_inside_scan_only():
+    def bad(xs):
+        def body(acc, x):
+            return acc + x.astype(jnp.float32), None
+
+        return jax.lax.scan(body, jnp.float32(0), xs)[0]
+
+    def good(xs):
+        total = jax.lax.scan(lambda c, x: (c + x, None),
+                             jnp.bfloat16(0), xs)[0]
+        return total.astype(jnp.float32)  # widen once, outside the loop
+
+    sds = jax.ShapeDtypeStruct((4,), jnp.bfloat16)
+    assert "DTYPE_WIDEN" in rules_of(lint_callable(bad, sds))
+    assert lint_callable(good, sds) == []
+
+
+# ---------------------------------------------------------------------------
+# AST rules
+# ---------------------------------------------------------------------------
+
+def test_host_sync_in_scan_body_flagged():
+    src = textwrap.dedent("""
+        import jax
+
+        def run(xs):
+            def body(carry, x):
+                scale = float(x.max())
+                return carry * scale, None
+            return jax.lax.scan(body, 1.0, xs)[0]
+    """)
+    found = lint_source(src, "fixture.py")
+    assert rules_of(found) == {"HOST_SYNC"}
+
+
+def test_host_sync_item_and_asarray_flagged():
+    src = textwrap.dedent("""
+        import jax
+        import numpy as np
+
+        @jax.jit
+        def f(x):
+            return np.asarray(x) + x.sum().item()
+    """)
+    found = lint_source(src, "fixture.py")
+    assert len([f for f in found if f.rule == "HOST_SYNC"]) == 2
+
+
+def test_host_sync_untraced_host_code_clean():
+    src = textwrap.dedent("""
+        import numpy as np
+
+        def record(res, m):
+            res.append(float(m["upper"]))
+            return np.asarray(res)
+    """)
+    assert lint_source(src, "fixture.py") == []
+
+
+def test_recompile_hazard_jit_in_loop_flagged_and_hoisted_clean():
+    bad = textwrap.dedent("""
+        import jax
+        for step in range(100):
+            out = jax.jit(lambda a: a * 2)(x)
+    """)
+    good = textwrap.dedent("""
+        import jax
+        f = jax.jit(lambda a: a * 2)
+        for step in range(100):
+            out = f(x)
+    """)
+    assert "RECOMPILE_HAZARD" in rules_of(lint_source(bad, "fixture.py"))
+    assert lint_source(good, "fixture.py") == []
+
+
+def test_recompile_hazard_unhashable_static_literal():
+    src = textwrap.dedent("""
+        import jax
+        f = jax.jit(g, static_argnums=(1,))
+        out = f(x, [1, 2, 3])
+    """)
+    found = lint_source(src, "fixture.py")
+    assert "RECOMPILE_HAZARD" in rules_of(found)
+
+
+def test_key_in_loop_flagged_and_split_clean():
+    bad = textwrap.dedent("""
+        import jax
+        for i in range(10):
+            k = jax.random.PRNGKey(i)
+    """)
+    good = textwrap.dedent("""
+        import jax
+        keys = jax.random.split(jax.random.PRNGKey(0), 10)
+        for i in range(10):
+            draw = jax.random.normal(keys[i], (4,))
+    """)
+    assert "KEY_IN_LOOP" in rules_of(lint_source(bad, "fixture.py"))
+    assert lint_source(good, "fixture.py") == []
+
+
+def test_key_in_loop_constant_seed_not_flagged():
+    src = textwrap.dedent("""
+        import jax
+        for i in range(10):
+            k = jax.random.PRNGKey(0)
+    """)
+    assert lint_source(src, "fixture.py") == []
+
+
+# ---------------------------------------------------------------------------
+# Contracts
+# ---------------------------------------------------------------------------
+
+class _GoodMix:
+    stateful = True
+
+    def state0(self, site_shapes, site_index):
+        return ()
+
+    def bind(self, states):
+        return self, []
+
+    def apply(self, tree, state):
+        return tree, state
+
+    def __call__(self, tree):
+        return tree
+
+
+def test_mix_protocol_missing_state0_flagged():
+    """Acceptance scenario: deleting state0 from a stateful mix is caught."""
+    class BrokenMix:
+        stateful = True
+
+        def bind(self, states):
+            return self, []
+
+        def apply(self, tree, state):
+            return tree, state
+
+        def __call__(self, tree):
+            return tree
+
+    found = check_mix_protocol({"broken": BrokenMix()})
+    assert any(f.rule == "MIX_PROTOCOL" and "state0" in f.message
+               for f in found)
+    assert check_mix_protocol({"good": _GoodMix()}) == []
+
+
+def test_mix_protocol_undeclared_stateful_flagged():
+    class Sneaky:
+        def state0(self, site_shapes, site_index):
+            return ()
+
+        def __call__(self, tree):
+            return tree
+
+    found = check_mix_protocol({"sneaky": Sneaky()})
+    assert any("stateful=True" in f.message for f in found)
+
+
+def test_mix_protocol_real_registry_clean():
+    assert check_mix_protocol() == []
+
+
+def test_topologies_real_registry_clean_and_bad_w_flagged():
+    assert check_topologies() == []
+
+    from repro.core.topology import Topology
+    bad = Topology("bad", 2, np.array([[0.9, 0.2], [0.1, 0.8]]))
+    found = check_topologies({"bad": lambda K: bad})
+    assert rules_of(found) == {"W_STOCHASTIC"}
+
+
+def test_blockpool_spec_real_allocator_clean():
+    assert check_blockpool_spec(depth=3) == []
+
+
+def test_blockpool_spec_leaky_release_flagged():
+    """A release() that forgets to return blocks to the free list breaks
+    conservation and is caught by the exhaustive sweep."""
+    from repro.serve.batch import BlockAllocator
+
+    class Leaky(BlockAllocator):
+        def release(self, slot):
+            self.tables[slot, :] = self.trash
+            self._owner[self._owner == slot] = -1
+            self._count[slot] = 0  # blocks never re-enter the free list
+
+    found = check_blockpool_spec(
+        lambda: Leaky(num_blocks=4, block_size=2, max_batch=2, capacity=4),
+        depth=2)
+    assert "BLOCKPOOL_SPEC" in rules_of(found)
+
+
+def test_blockpool_spec_failed_ensure_mutation_flagged():
+    from repro.serve.batch import BlockAllocator
+
+    class Greedy(BlockAllocator):
+        def ensure(self, slot, n_tokens):
+            need = min(self.blocks_for(n_tokens),
+                       self.max_blocks) - self.owned(slot)
+            while need > 0 and self._free:  # partial alloc, then "fail"
+                blk = self._free.pop()
+                self._owner[blk] = slot
+                self.tables[slot, self._count[slot]] = blk
+                self._count[slot] += 1
+                need -= 1
+            return need <= 0
+
+    found = check_blockpool_spec(
+        lambda: Greedy(num_blocks=2, block_size=2, max_batch=2, capacity=8),
+        depth=2)
+    assert "BLOCKPOOL_SPEC" in rules_of(found)
+
+
+def test_trace_fail_on_broken_entry():
+    from repro.analysis.entrypoints import EntryPoint, trace_entry
+
+    def boom():
+        raise RuntimeError("nope")
+
+    found, allowed = trace_entry(EntryPoint(name="fixture:boom", build=boom))
+    assert rules_of(found) == {"TRACE_FAIL"}
+    assert "nope" in found[0].message
+
+
+# ---------------------------------------------------------------------------
+# Suppressions / BAD_NOQA
+# ---------------------------------------------------------------------------
+
+def test_noqa_with_reason_suppresses():
+    src = 'x = 1  # repro: noqa[KEY_IN_LOOP] fixture reason\n'
+    sups = parse_suppressions(src, "f.py")
+    f = Finding(rule="KEY_IN_LOOP", path="f.py", line=1, message="m")
+    kept, suppressed = apply_suppressions([f], sups)
+    assert kept == [] and suppressed[0][1] == "fixture reason"
+    assert noqa_findings(sups, RULES) == []
+
+
+def test_standalone_noqa_covers_next_line():
+    src = ('# repro: noqa[HOST_SYNC] fixture reason\n'
+           'y = x.item()\n')
+    sups = parse_suppressions(src, "f.py")
+    f = Finding(rule="HOST_SYNC", path="f.py", line=2, message="m")
+    kept, suppressed = apply_suppressions([f], sups)
+    assert kept == [] and len(suppressed) == 1
+
+
+def test_noqa_without_reason_is_a_finding_and_does_not_suppress():
+    src = 'x = 1  # repro: noqa[KEY_IN_LOOP]\n'
+    sups = parse_suppressions(src, "f.py")
+    f = Finding(rule="KEY_IN_LOOP", path="f.py", line=1, message="m")
+    kept, _ = apply_suppressions([f], sups)
+    assert kept == [f]
+    bad = noqa_findings(sups, RULES)
+    assert rules_of(bad) == {"BAD_NOQA"}
+
+
+def test_noqa_unknown_rule_is_a_finding():
+    src = 'x = 1  # repro: noqa[NOT_A_RULE] because\n'
+    bad = noqa_findings(parse_suppressions(src, "f.py"), RULES)
+    assert rules_of(bad) == {"BAD_NOQA"}
+
+
+def test_noqa_in_docstring_is_documentation_not_suppression():
+    src = '"""docs show ``# repro: noqa[RULE] reason`` syntax."""\nx = 1\n'
+    assert parse_suppressions(src, "f.py") == []
+
+
+def test_noqa_file_level():
+    src = '# repro: noqa-file[KEY_IN_LOOP] fixture sweeps seeds on purpose\n'
+    sups = parse_suppressions(src, "f.py")
+    f = Finding(rule="KEY_IN_LOOP", path="f.py", line=99, message="m")
+    kept, suppressed = apply_suppressions([f], sups)
+    assert kept == [] and len(suppressed) == 1
+
+
+# ---------------------------------------------------------------------------
+# Baseline round-trip
+# ---------------------------------------------------------------------------
+
+def test_baseline_roundtrip_simple(tmp_path):
+    fs = [Finding("KEY_REUSE", "a.py", 3, "m1"),
+          Finding("HOST_SYNC", "b.py", 0, "m2")]
+    p = tmp_path / "baseline.json"
+    save_baseline(fs, str(p))
+    assert set(load_baseline(str(p))) == set(fs)
+    new, stale = diff_baseline(fs, load_baseline(str(p)))
+    assert new == [] and stale == []
+
+
+def test_baseline_missing_file_and_bad_version(tmp_path):
+    assert load_baseline(str(tmp_path / "nope.json")) == []
+    p = tmp_path / "bad.json"
+    p.write_text(json.dumps({"version": 99, "findings": []}))
+    with pytest.raises(ValueError):
+        load_baseline(str(p))
+
+
+def test_baseline_roundtrip_property(tmp_path):
+    hypothesis = pytest.importorskip(
+        "hypothesis", reason="property sweep needs hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    rule = st.sampled_from(sorted(RULES))
+    path = st.text(st.characters(min_codepoint=33, max_codepoint=126),
+                   max_size=20)
+    finding = st.builds(Finding, rule=rule, path=path,
+                        line=st.integers(0, 10_000),
+                        message=st.text(max_size=80))
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.lists(finding, max_size=20))
+    def prop(findings):
+        p = tmp_path / "prop.json"
+        save_baseline(findings, str(p))
+        loaded = load_baseline(str(p))
+        # write -> load preserves the findings *set* (dedup by fingerprint)
+        assert ({f.fingerprint for f in loaded}
+                == {f.fingerprint for f in findings})
+        new, stale = diff_baseline(findings, loaded)
+        assert new == [] and stale == []
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# Catalogue / CLI plumbing
+# ---------------------------------------------------------------------------
+
+def test_every_rule_has_catalogue_entry_and_explain():
+    for rid in RULES:
+        text = explain(rid)
+        assert rid in text and "BAD:" in text and "GOOD:" in text
+    with pytest.raises(KeyError):
+        explain("NOT_A_RULE")
+
+
+def test_cli_explain_and_ast_scan(tmp_path, capsys):
+    from repro.analysis.cli import main
+
+    assert main(["--explain", "KEY_REUSE"]) == 0
+    out = capsys.readouterr().out
+    assert "KEY_REUSE" in out and "split" in out
+
+    assert main(["--explain", "NOT_A_RULE"]) == 2
+
+    bad = tmp_path / "fixture.py"
+    bad.write_text("import jax\nfor i in range(3):\n"
+                   "    k = jax.random.PRNGKey(i)\n")
+    assert main(["--engines", "ast", str(bad)]) == 1
+    out = capsys.readouterr().out
+    assert "KEY_IN_LOOP" in out
+
+
+def test_cli_baseline_gate(tmp_path, capsys):
+    from repro.analysis.cli import main
+
+    bad = tmp_path / "fixture.py"
+    bad.write_text("import jax\nfor i in range(3):\n"
+                   "    k = jax.random.PRNGKey(i)\n")
+    base = tmp_path / "base.json"
+    assert main(["--engines", "ast", "--write-baseline", str(base),
+                 str(bad)]) == 0
+    capsys.readouterr()
+    # same findings as baseline -> pass
+    assert main(["--engines", "ast", "--baseline", str(base),
+                 str(bad)]) == 0
+    capsys.readouterr()
+    # a new finding -> fail
+    bad.write_text("import jax\nfor i in range(3):\n"
+                   "    k = jax.random.PRNGKey(i)\n"
+                   "    j = jax.jit(lambda a: a)(i)\n")
+    assert main(["--engines", "ast", "--baseline", str(base),
+                 str(bad)]) == 1
+    out = capsys.readouterr().out
+    assert "new finding" in out
+
+
+# ---------------------------------------------------------------------------
+# Bench compare (satellite: asymmetric metrics fail with a clear message)
+# ---------------------------------------------------------------------------
+
+def test_compare_records_metric_asymmetry_fails_clearly():
+    import importlib
+    run = importlib.import_module("benchmarks.run")
+
+    base = {"eng": {"steps_per_sec": {"fused": 10.0, "per_step": 5.0}}}
+    fresh = {"eng": {"steps_per_sec": {"fused": 10.0}}}
+    failures = run.compare_records(base, fresh, tol=0.15)
+    assert len(failures) == 1
+    assert "missing from the fresh record" in failures[0]
+
+    failures = run.compare_records(fresh, base, tol=0.15)
+    assert len(failures) == 1
+    assert "missing from the committed baseline" in failures[0]
+
+    # whole-record asymmetry both ways
+    failures = run.compare_records({"a": {"steps_per_sec": 1.0}}, {}, 0.15)
+    assert failures and "no fresh counterpart" in failures[0]
+    failures = run.compare_records({}, {"a": {"steps_per_sec": 1.0}}, 0.15)
+    assert failures and "no committed baseline" in failures[0]
+
+
+def test_compare_records_regression_still_fails():
+    import importlib
+    run = importlib.import_module("benchmarks.run")
+
+    base = {"eng": {"steps_per_sec": 10.0}}
+    fresh = {"eng": {"steps_per_sec": 5.0}}
+    assert run.compare_records(base, fresh, tol=0.15)
+    assert run.compare_records(base, base, tol=0.15) == []
+
+
+def test_load_bench_records_bad_json_clear_message(tmp_path, monkeypatch):
+    import importlib
+    run = importlib.import_module("benchmarks.run")
+
+    monkeypatch.setattr(run, "RESULTS", str(tmp_path))
+    (tmp_path / "BENCH_broken.json").write_text("{not json")
+    with pytest.raises(SystemExit, match="not valid JSON"):
+        run.load_bench_records()

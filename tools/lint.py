@@ -1,0 +1,16 @@
+#!/usr/bin/env python
+"""Shim: run the repo's static-analysis suite from anywhere.
+
+Equivalent to ``PYTHONPATH=src python -m repro.analysis ...`` from the repo
+root; all arguments pass through (see ``--help``).
+"""
+import os
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(ROOT, "src"))
+
+from repro.analysis.cli import main  # noqa: E402
+
+if __name__ == "__main__":
+    sys.exit(main())
