@@ -9,6 +9,8 @@ from __future__ import annotations
 
 import json
 import os
+import subprocess
+import time
 
 from repro.core import HParams, HypergradConfig, logreg_hyperopt, ring
 from repro.data import (NodeSampler, make_classification, shard_to_nodes,
@@ -43,10 +45,48 @@ def build(dataset: str, K: int, batch_total: int = 400, seed: int = 0):
     return prob, cfg, sampler, ring(K)
 
 
+def provenance() -> dict:
+    """Attribution stamp for a BENCH record: git sha (+dirty flag), jax
+    version, device kind, UTC timestamp. Every value degrades to a string
+    placeholder rather than failing — benches must run outside git too."""
+    import jax
+    sha = "unknown"
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(os.path.abspath(__file__)), timeout=10)
+        if out.returncode == 0:
+            sha = out.stdout.strip()
+            dirty = subprocess.run(
+                ["git", "status", "--porcelain"], capture_output=True,
+                text=True, cwd=os.path.dirname(os.path.abspath(__file__)),
+                timeout=10)
+            if dirty.returncode == 0 and dirty.stdout.strip():
+                sha += "-dirty"
+    except (OSError, subprocess.TimeoutExpired):
+        pass
+    try:
+        device = jax.devices()[0].device_kind
+    except Exception:
+        device = "unknown"
+    return {
+        "git_sha": sha,
+        "jax_version": jax.__version__,
+        "device_kind": device,
+        "backend": jax.default_backend(),
+        "timestamp_utc": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime()),
+    }
+
+
 def write_bench_json(name: str, payload: dict) -> str:
     """Write ``benchmarks/results/BENCH_<name>.json`` — the machine-readable
     perf record tracked across PRs (steps/sec, tokens/sec, consensus error,
-    wall-clock curves; whatever the bench measures). Returns the path."""
+    wall-clock curves; whatever the bench measures). Every record is stamped
+    with :func:`provenance` (git sha, jax version, device kind, timestamp)
+    so ``run.py --compare`` trajectories are attributable. Returns the
+    path."""
+    payload = dict(payload)
+    payload.setdefault("provenance", provenance())
     os.makedirs(RESULTS, exist_ok=True)
     path = os.path.join(RESULTS, f"BENCH_{name}.json")
     with open(path, "w") as f:

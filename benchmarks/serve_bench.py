@@ -37,6 +37,7 @@ import numpy as np
 from benchmarks.common import write_bench_json
 from repro.configs import get
 from repro.models import init_params
+from repro.obs import Recorder, SpanTracer
 from repro.serve import ServeEngine
 
 
@@ -111,6 +112,33 @@ def main(n_requests: int = 18, max_batch: int = 4, decode_chunk: int = 8,
     eng = make("continuous", prefill_bucket=True)
     rows.append(row("continuous+bucket/cold", drain(eng, workload)))
 
+    # obs overhead: the same paged drain with a live Recorder + SpanTracer
+    # (the obs-off baseline is the NullRecorder default above). Obs is
+    # host-side only, so the token streams must be identical; the cost
+    # contract is <2% tokens/sec. One warm-up drain per engine compiles its
+    # programs, then the timed drains INTERLEAVE off/on so slow CPU drift
+    # (thermal, co-tenant load) hits both sides equally; best-of-n damps
+    # per-drain jitter.
+    eng_off = make("paged")
+    eng_obs = make("paged", recorder=Recorder(tracer=SpanTracer()))
+    drain(eng_off, workload), drain(eng_obs, workload)  # warm both
+    offs, ons = [], []
+    for _ in range(5):
+        offs.append(drain(eng_off, workload))
+        ons.append(drain(eng_obs, workload))
+    off = max(offs, key=lambda r: r["tok_s"])
+    on = max(ons, key=lambda r: r["tok_s"])
+    assert ([t for _, t in sorted(off["results"].items())]
+            == [t for _, t in sorted(on["results"].items())]), \
+        "obs-on paged streams diverged from obs-off"
+    overhead = 1.0 - on["tok_s"] / off["tok_s"]
+    rows.append({
+        "name": f"serve/{arch}/paged/obs_overhead",
+        "us_per_call": 0.0,
+        "derived": (f"tok_s_off={off['tok_s']:.1f};tok_s_on={on['tok_s']:.1f};"
+                    f"overhead={overhead * 100:.2f}%"),
+    })
+
     speedup = warm["continuous"]["tok_s"] / warm["cohort"]["tok_s"]
     conc = {m: warm[m]["peak_concurrency"] for m in warm}
     conc_gain = conc["paged"] / max(conc["continuous"], 1)
@@ -133,6 +161,16 @@ def main(n_requests: int = 18, max_batch: int = 4, decode_chunk: int = 8,
         "paged_vs_continuous_tok_s":
             float(warm["paged"]["tok_s"] / warm["continuous"]["tok_s"]),
         "paged_vs_continuous_concurrency": float(conc_gain),
+        # suffixed key names on purpose: run.py --compare gates exact
+        # "tokens_per_sec" keys, and the obs row is a ratio contract, not a
+        # tracked perf trajectory
+        "obs_overhead": {
+            "mode": "paged",
+            "tokens_per_sec_off": float(off["tok_s"]),
+            "tokens_per_sec_on": float(on["tok_s"]),
+            "overhead_frac": float(overhead),
+            "streams_identical": True,
+        },
     })
     rows.append({
         "name": f"serve/{arch}/continuous_vs_cohort",

@@ -10,7 +10,12 @@ Three rules, all scoped to what is statically decidable without imports:
   combinator (``jit``/``scan``/``vmap``/``pmap``/``shard_map``/``cond``/
   ``while_loop``/``fori_loop``/``grad``/``checkpoint``/...), or lexically
   nested inside one that is. Host code that merely *drives* jitted functions
-  (run loops, result recording) is deliberately out of scope.
+  (run loops, result recording) is deliberately out of scope. Host-callback
+  staging — ``jax.debug.callback`` / ``io_callback`` / ``pure_callback`` —
+  is flagged wherever it appears (callbacks are host bridges by
+  construction), with one recorded allowance: calls in ``src/repro/obs/``
+  (the opt-in debug tap, :mod:`repro.obs.tap`) are reported as
+  allowed-with-reason rather than kept — see :func:`apply_obs_allowance`.
 * **RECOMPILE_HAZARD** — ``jax.jit(...)`` called inside a ``for``/``while``
   body; ``jax.jit(f)(args)`` immediately invoked (the wrapper and its trace
   cache are discarded per call); and a call to a module-level
@@ -40,6 +45,17 @@ TRACING_FUNCS = frozenset({
 
 HOST_SYNC_METHODS = frozenset({"item", "tolist"})
 HOST_SYNC_NP = frozenset({"asarray", "array"})
+HOST_CALLBACKS = frozenset({"io_callback", "pure_callback"})
+
+# The one sanctioned host-callback site: repro.obs's opt-in in-scan debug tap
+# (repro/obs/tap.py). HOST_SYNC findings under this prefix are re-filed as
+# allowed-with-reason instead of kept; the allowance is path-scoped so a
+# callback added anywhere else still fails the lint gate
+# (tests/test_analysis.py pins that it does not leak).
+OBS_ALLOWANCE_PREFIX = "src/repro/obs/"
+OBS_ALLOWANCE_REASON = ("repro.obs debug tap: opt-in host callback for "
+                        "streaming metrics out of a fused scan; never on a "
+                        "benchmarked path")
 
 
 def _callee_name(func: ast.expr) -> str | None:
@@ -169,10 +185,23 @@ class _Linter(ast.NodeVisitor):
     # -- calls: all three rules fire here ----------------------------------
 
     def visit_Call(self, node):
+        self._check_host_callback(node)
         self._check_host_sync(node)
         self._check_recompile(node)
         self._check_key_in_loop(node)
         self.generic_visit(node)
+
+    def _check_host_callback(self, node: ast.Call):
+        """Host-callback staging is a host bridge wherever it appears (the
+        callback body runs Python against device execution), so this fires
+        regardless of traced context — the obs tap allowance is applied
+        afterwards by path, not here."""
+        name = _callee_name(node.func)
+        dotted = _dotted(node.func)
+        if name in HOST_CALLBACKS or dotted.endswith("debug.callback"):
+            self._emit("HOST_SYNC", node,
+                       f"{dotted}(...) stages a host callback into device "
+                       "execution — a device->host bridge on every invocation")
 
     def _check_host_sync(self, node: ast.Call):
         if not self._in_traced:
@@ -289,6 +318,23 @@ def _check_static_calls(tree: ast.AST, path: str,
 # ---------------------------------------------------------------------------
 # Public API
 # ---------------------------------------------------------------------------
+
+def apply_obs_allowance(findings: list[Finding],
+                        ) -> tuple[list[Finding], list[tuple[Finding, str]]]:
+    """Split ``findings`` into (kept, allowed-with-reason): HOST_SYNC
+    findings whose path sits under ``src/repro/obs/`` are the sanctioned
+    debug-tap callbacks and are recorded rather than kept. Every other rule
+    — and HOST_SYNC anywhere else — passes through untouched."""
+    kept: list[Finding] = []
+    allowed: list[tuple[Finding, str]] = []
+    for f in findings:
+        p = f.path.replace(os.sep, "/")
+        if f.rule == "HOST_SYNC" and p.startswith(OBS_ALLOWANCE_PREFIX):
+            allowed.append((f, OBS_ALLOWANCE_REASON))
+        else:
+            kept.append(f)
+    return kept, allowed
+
 
 def lint_source(text: str, path: str) -> list[Finding]:
     try:

@@ -113,7 +113,14 @@ _rule(
         "(tracer leak) or, in host callbacks / between dispatches, serialize "
         "the pipeline — the dispatch-overhead class engine_bench measures. "
         "The AST pass flags them inside functions that are jitted, decorated "
-        "with jit, or passed to scan/vmap/shard_map (including nested defs)."),
+        "with jit, or passed to scan/vmap/shard_map (including nested defs). "
+        "Host-callback staging (`jax.debug.callback`, `io_callback`, "
+        "`pure_callback`) is flagged wherever it appears — the callback body "
+        "is a host bridge by construction. One path-scoped allowance exists: "
+        "calls under `src/repro/obs/` (the opt-in repro.obs debug tap) are "
+        "recorded as allowed-with-reason instead of failing the gate; the "
+        "in-scan metric path proper accumulates in the scan carry and drains "
+        "at chunk boundaries, so it needs no callbacks at all."),
     bad="""\
 def body(carry, x):
     scale = float(x.max())           # host sync inside a scan body

@@ -44,8 +44,11 @@ def _run_engines(paths: list[str], engines: tuple[str, ...],
             text = fh.read()
         sups.extend(parse_suppressions(text, rp))
         if "ast" in engines:
-            from repro.analysis.ast_rules import lint_source
-            findings.extend(lint_source(text, rp))
+            from repro.analysis.ast_rules import (apply_obs_allowance,
+                                                  lint_source)
+            kept, obs_allowed = apply_obs_allowance(lint_source(text, rp))
+            findings.extend(kept)
+            allowed.extend(obs_allowed)
     if "jaxpr" in engines:
         from repro.analysis.entrypoints import trace_all
         f, a, s = trace_all()

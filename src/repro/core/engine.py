@@ -414,7 +414,7 @@ class Engine:
                  mix: str = "dense", dispatch: str = "fused",
                  self_weight: float = 1.0 / 3.0, axis_name: str = "data",
                  mesh=None, donate: bool = True,
-                 mix_kwargs: dict | None = None):
+                 mix_kwargs: dict | None = None, recorder=None):
         if isinstance(topo, Topology):
             self.K, weights = topo.size, topo.weights
         else:
@@ -432,6 +432,13 @@ class Engine:
         self.mix = make_mix(mix, weights=weights, K=self.K,
                             self_weight=self_weight, axis_name=axis_name,
                             **mk)
+        if recorder is None:
+            from repro.obs.recorder import NullRecorder
+            recorder = NullRecorder()
+        self.recorder = recorder
+        # static inputs for the obs bytes-per-mix-round estimate
+        self._weights = weights
+        self._mix_ratio = float(mk.get("ratio", 1.0))
         self._mix_stateful = bool(getattr(self.mix, "stateful", False))
         # shard-local backends run the algorithm body under shard_map; their
         # carry state (EF accumulators, async neighbor caches) all carries a
@@ -469,12 +476,10 @@ class Engine:
     def _carry_state(self, carry):
         return carry[0] if self._mix_stateful else carry
 
-    def _mix_state0(self, state, batch, nkeys):
-        """Initial mix-carry slots, one per mix call site of a step (shapes
-        discovered with eval_shape — trace order is deterministic). The mix's
-        ``state0(site_shapes, site_index)`` builds each slot (EF: a zero
-        accumulator; async gossip: zero caches + ages + drop keys); mixes
-        without one get zeros shaped like the mixed tree."""
+    def _mix_sites(self, state, batch, nkeys) -> list:
+        """Per-call-site abstract shape trees of one step's mix invocations,
+        discovered with eval_shape — trace order is deterministic. Shared by
+        the stateful-mix carry seeding and the obs bytes-per-round metric."""
         sites: list = []
 
         def probe(tree):
@@ -484,11 +489,30 @@ class Engine:
 
         jax.eval_shape(lambda s, b, k: self._step_nomix(probe, s, b, k),
                        state, batch, nkeys)
+        return sites
+
+    def _mix_state0(self, state, batch, nkeys):
+        """Initial mix-carry slots, one per mix call site of a step. The
+        mix's ``state0(site_shapes, site_index)`` builds each slot (EF: a
+        zero accumulator; async gossip: zero caches + ages + drop keys);
+        mixes without one get zeros shaped like the mixed tree."""
+        sites = self._mix_sites(state, batch, nkeys)
         make0 = getattr(self.mix, "state0", None)
         if make0 is not None:
             return tuple(make0(t, i) for i, t in enumerate(sites))
         return tuple(jax.tree.map(lambda sd: jnp.zeros(sd.shape, sd.dtype), t)
                      for t in sites)
+
+    def _obs_mset(self, state, batch, nkeys):
+        """Memoized trainer MetricSet for in-scan accumulation (consensus,
+        update/estimator norms, mix bytes, async staleness histogram)."""
+        if "mset" not in self._jit_cache:
+            from repro.obs.metrics import trainer_metric_set
+            sites = self._mix_sites(state, batch, nkeys)
+            self._jit_cache["mset"] = trainer_metric_set(
+                state, mix=self.mix, mix_sites=sites, ratio=self._mix_ratio,
+                weights=self._weights)
+        return self._jit_cache["mset"]
 
     # -- building blocks ----------------------------------------------------
 
@@ -537,13 +561,20 @@ class Engine:
             return jax.jit(ev)
         return self._cached("evaluate", build)
 
-    def _make_chunk(self, sample_batch, host: bool):
+    def _make_chunk(self, sample_batch, host: bool, mset=None):
         """Scan-fused multi-step kernel. Three flavors:
 
         * ring_local: shard_map(scan) over pre-stacked batches + node keys;
         * host sampler: scan over pre-stacked batches, in-scan diagnostics;
         * device sampler: sampling *inside* the scan — the whole eval
           interval is one device program with no host round-trips.
+
+        With ``mset`` (obs enabled, non-shard-local) the chunk additionally
+        threads the metric accumulator through the scan carry —
+        ``chunk(carry, macc, ...) -> (carry, macc, trace)`` — so metric
+        accumulation rides the same device program and the algorithm's own
+        operation stream is untouched (the fused==per-step bitwise contract
+        holds with obs on; pinned in tests/test_obs.py).
         """
         K = self.K
 
@@ -559,35 +590,66 @@ class Engine:
                                      (spec, tspec, tspec), spec)
             return jax.jit(chunk, donate_argnums=self._donate)
 
+        def obs_body(cm, batch, nkeys):
+            c, m = cm
+            old = self._carry_state(c)
+            c = self._carry_step(c, batch, nkeys)
+            s = self._carry_state(c)
+            m = mset.update(m, {
+                "old": old, "new": s,
+                "mix_states": c[1] if self._mix_stateful else None})
+            return (c, m), (consensus_error(s.x), consensus_error(s.y))
+
         if host:
-            def chunk(carry, batches, nkeys):
-                def body(c, x):
-                    b, nk = x
-                    c = self._carry_step(c, b, nk)
-                    s = self._carry_state(c)
-                    return c, (consensus_error(s.x), consensus_error(s.y))
-                return jax.lax.scan(body, carry, (batches, nkeys))
+            if mset is not None:
+                def chunk(carry, macc, batches, nkeys):
+                    def body(cm, x):
+                        b, nk = x
+                        return obs_body(cm, b, nk)
+                    (c, m), trace = jax.lax.scan(body, (carry, macc),
+                                                 (batches, nkeys))
+                    return c, m, trace
+            else:
+                def chunk(carry, batches, nkeys):
+                    def body(c, x):
+                        b, nk = x
+                        c = self._carry_step(c, b, nk)
+                        s = self._carry_state(c)
+                        return c, (consensus_error(s.x), consensus_error(s.y))
+                    return jax.lax.scan(body, carry, (batches, nkeys))
         else:
-            def chunk(carry, kbs, kns):
-                def body(c, kk):
-                    kb, kn = kk
-                    c = self._carry_step(c, sample_batch(kb),
-                                         jax.random.split(kn, K))
-                    s = self._carry_state(c)
-                    return c, (consensus_error(s.x), consensus_error(s.y))
-                return jax.lax.scan(body, carry, (kbs, kns))
+            if mset is not None:
+                def chunk(carry, macc, kbs, kns):
+                    def body(cm, kk):
+                        kb, kn = kk
+                        return obs_body(cm, sample_batch(kb),
+                                        jax.random.split(kn, K))
+                    (c, m), trace = jax.lax.scan(body, (carry, macc),
+                                                 (kbs, kns))
+                    return c, m, trace
+            else:
+                def chunk(carry, kbs, kns):
+                    def body(c, kk):
+                        kb, kn = kk
+                        c = self._carry_step(c, sample_batch(kb),
+                                             jax.random.split(kn, K))
+                        s = self._carry_state(c)
+                        return c, (consensus_error(s.x), consensus_error(s.y))
+                    return jax.lax.scan(body, carry, (kbs, kns))
 
         return jax.jit(chunk, donate_argnums=self._donate)
 
-    def _chunk_fn(self, sample_batch, host: bool):
+    def _chunk_fn(self, sample_batch, host: bool, mset=None):
         # keyed on the sampler OBJECT: the cache entry pins a strong
         # reference so a recycled id() can never resurrect a chunk that
-        # closes over a dead sampler.
-        key = ("chunk", id(sample_batch), host)
+        # closes over a dead sampler. The obs flag forks the cache: the obs
+        # chunk has a different signature (it threads the metric accumulator).
+        key = ("chunk", id(sample_batch), host, mset is not None)
         hit = self._jit_cache.get(key)
         if hit is None or hit[0] is not sample_batch:
             self._jit_cache[key] = (sample_batch,
-                                    self._make_chunk(sample_batch, host))
+                                    self._make_chunk(sample_batch, host,
+                                                     mset))
         return self._jit_cache[key][1]
 
     def _stack_batches(self, sample_batch, kb_chunk, host: bool):
@@ -640,28 +702,46 @@ class Engine:
         kbs, kns = key_schedule(key, steps)
 
         in_scan = self.dispatch == "fused" and not self._shard_local
+        rec = self.recorder
+        # In-scan metric accumulation rides the fused chunk only; per_step
+        # and shard_local dispatch record eval-boundary gauges alone (metric
+        # reduction out of shard_map is out of scope — documented in
+        # docs/observability.md).
+        obs_in_scan = in_scan and rec.enabled
+        mset = self._obs_mset(state, b0, nk0) if obs_in_scan else None
+        obs_in_scan = obs_in_scan and len(mset) > 0
         res = RunResult(self.algo, [], [], [], [], [], {})
         t0 = time.perf_counter()
 
         def record(t, state, trace=None):
-            m = self.evaluate(state, eval_batch)
-            res.steps.append(t)
-            res.upper_loss.append(float(m["upper"]))
-            res.lower_loss.append(float(m["lower"]))
-            res.consensus_x.append(float(m["cx"]))
-            res.consensus_y.append(float(m["cy"]))
-            if in_scan:
-                # in-scan accumulated diagnostics: chunk-mean consensus
-                cx, cy = ((float(jnp.mean(trace[0])), float(jnp.mean(trace[1])))
-                          if trace is not None
-                          else (float(m["cx"]), float(m["cy"])))
-                res.extra.setdefault("scan_cx_mean", []).append(cx)
-                res.extra.setdefault("scan_cy_mean", []).append(cy)
-            if extra_metrics is not None:
-                for k, v in extra_metrics(state, eval_batch).items():
+            with rec.span("eval", step=t):
+                m = self.evaluate(state, eval_batch)
+                res.steps.append(t)
+                res.upper_loss.append(float(m["upper"]))
+                res.lower_loss.append(float(m["lower"]))
+                res.consensus_x.append(float(m["cx"]))
+                res.consensus_y.append(float(m["cy"]))
+                if in_scan:
+                    # in-scan accumulated diagnostics: chunk-mean consensus
+                    cx, cy = ((float(jnp.mean(trace[0])),
+                               float(jnp.mean(trace[1])))
+                              if trace is not None
+                              else (float(m["cx"]), float(m["cy"])))
+                    res.extra.setdefault("scan_cx_mean", []).append(cx)
+                    res.extra.setdefault("scan_cy_mean", []).append(cy)
+                extras = (extra_metrics(state, eval_batch)
+                          if extra_metrics is not None else {})
+                for k, v in extras.items():
                     res.extra.setdefault(k, []).append(float(v))
-            if on_eval is not None:
-                on_eval(t, state)
+                if rec.enabled:
+                    rec.metrics({"eval_upper_loss": res.upper_loss[-1],
+                                 "eval_lower_loss": res.lower_loss[-1],
+                                 "eval_consensus_x": res.consensus_x[-1],
+                                 "eval_consensus_y": res.consensus_y[-1],
+                                 **{f"eval_{k}": float(v)
+                                    for k, v in extras.items()}}, step=t)
+                if on_eval is not None:
+                    on_eval(t, state)
 
         record(0, self._carry_state(carry))
 
@@ -670,25 +750,46 @@ class Engine:
                 carry = self.step(carry, sample_batch(kbs[t - 1]),
                                   jax.random.split(kns[t - 1], K))
                 if t % eval_every == 0 or t == steps:
+                    rec.counter_add("train_steps", eval_every
+                                    if t % eval_every == 0 else t % eval_every)
                     record(t, self._carry_state(carry))
         else:
-            chunk = self._chunk_fn(sample_batch, host)
+            chunk = self._chunk_fn(sample_batch, host,
+                                   mset if obs_in_scan else None)
+            macc = mset.init() if obs_in_scan else None
             t = 0
             while t < steps:
                 n = min(eval_every, steps - t)
                 kb_c, kn_c = kbs[t:t + n], kns[t:t + n]
-                if self._shard_local:
-                    xs = self._stack_batches(sample_batch, kb_c, host)
-                    nk = jax.vmap(lambda k: jax.random.split(k, K))(kn_c)
-                    carry, trace = chunk(carry, xs, nk), None
-                elif host:
-                    xs = self._stack_batches(sample_batch, kb_c, host)
-                    nk = jax.vmap(lambda k: jax.random.split(k, K))(kn_c)
-                    carry, trace = chunk(carry, xs, nk)
-                else:
-                    carry, trace = chunk(carry, kb_c, kn_c)
+                with rec.span("train_chunk", t0=t, steps=n):
+                    if self._shard_local:
+                        xs = self._stack_batches(sample_batch, kb_c, host)
+                        nk = jax.vmap(lambda k: jax.random.split(k, K))(kn_c)
+                        carry, trace = chunk(carry, xs, nk), None
+                    elif host:
+                        xs = self._stack_batches(sample_batch, kb_c, host)
+                        nk = jax.vmap(lambda k: jax.random.split(k, K))(kn_c)
+                        if obs_in_scan:
+                            carry, macc, trace = chunk(carry, macc, xs, nk)
+                        else:
+                            carry, trace = chunk(carry, xs, nk)
+                    elif obs_in_scan:
+                        carry, macc, trace = chunk(carry, macc, kb_c, kn_c)
+                    else:
+                        carry, trace = chunk(carry, kb_c, kn_c)
                 t += n
+                rec.counter_add("train_steps", n)
+                if obs_in_scan:
+                    # drain at the chunk boundary (the host is already
+                    # syncing for the eval record below) and reset the
+                    # accumulator for the next chunk
+                    rec.record_drain(mset.drain(macc), step=t)
+                    macc = mset.init()
                 record(t, self._carry_state(carry), trace)
 
         res.wall_time_s = time.perf_counter() - t0
+        if rec.enabled:
+            rec.event("run_done", algo=self.algo, steps=steps,
+                      wall_time_s=res.wall_time_s)
+            rec.flush()
         return (res, self._carry_state(carry)) if return_state else res

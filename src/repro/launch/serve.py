@@ -19,6 +19,7 @@ import numpy as np
 
 from repro.configs import get
 from repro.models import init_params
+from repro.obs import cli_recorder
 from repro.serve import ServeEngine
 
 
@@ -39,15 +40,21 @@ def main():
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="physical KV blocks in the pool (paged mode; "
                          "default: max_batch*capacity/block_size)")
+    ap.add_argument("--metrics", default=None, metavar="DIR",
+                    help="write metrics.jsonl + metrics.prom into DIR")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="write a Perfetto-loadable trace.json into DIR")
     args = ap.parse_args()
 
     spec = get(args.arch)
     cfg = spec.reduced() if args.reduced else spec.config
     params = init_params(cfg, jax.random.PRNGKey(0))
+    recorder, finalize_obs = cli_recorder(args.metrics, args.trace_dir)
     eng = ServeEngine(cfg, params, capacity=args.capacity,
                       max_batch=args.max_batch, mode=args.mode,
                       decode_chunk=args.decode_chunk,
-                      block_size=args.block_size, num_blocks=args.num_blocks)
+                      block_size=args.block_size, num_blocks=args.num_blocks,
+                      recorder=recorder)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, size=rng.integers(3, 10))
@@ -63,6 +70,8 @@ def main():
           f"mode={args.mode})")
     if eng.stats:
         print("  " + ", ".join(f"{k}={v}" for k, v in eng.stats.items()))
+    for p in finalize_obs():
+        print("obs:", p)
 
 
 if __name__ == "__main__":

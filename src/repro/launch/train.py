@@ -24,6 +24,7 @@ from repro.checkpoint import save
 from repro.configs import get
 from repro.core.common import HParams
 from repro.data import make_device_lm_sampler, make_node_batch
+from repro.obs import cli_recorder, jax_profile
 from repro.train import TrainerConfig, make_trainer_engine
 
 
@@ -49,6 +50,13 @@ def main():
     ap.add_argument("--beta2", type=float, default=0.5)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--metrics", default=None, metavar="DIR",
+                    help="write metrics.jsonl + metrics.prom into DIR")
+    ap.add_argument("--trace-dir", default=None, metavar="DIR",
+                    help="write a Perfetto-loadable trace.json into DIR")
+    ap.add_argument("--jax-profile", action="store_true",
+                    help="additionally capture a jax.profiler device trace "
+                         "into --trace-dir")
     args = ap.parse_args()
 
     spec = get(args.arch)
@@ -57,7 +65,9 @@ def main():
                        hp=HParams(eta=args.eta, beta1=args.beta1,
                                   beta2=args.beta2))
     K = args.nodes
-    problem, eng = make_trainer_engine(cfg, tc, K, dispatch=args.dispatch)
+    recorder, finalize_obs = cli_recorder(args.metrics, args.trace_dir)
+    problem, eng = make_trainer_engine(cfg, tc, K, dispatch=args.dispatch,
+                                       recorder=recorder)
     sampler = make_device_lm_sampler(cfg, tc, K, args.batch, args.seq)
     eval_batch = make_node_batch(cfg, jax.random.PRNGKey(args.seed + 17),
                                  args.batch, args.seq)
@@ -70,14 +80,24 @@ def main():
         if args.ckpt_dir and t > 0:
             save(args.ckpt_dir, t, {"x": state.x, "y": state.y})
 
-    res = eng.run(sampler, eval_batch, steps=args.steps, seed=args.seed,
-                  eval_every=args.eval_every, on_eval=on_eval)
+    if args.jax_profile:
+        if not args.trace_dir:
+            raise SystemExit("--jax-profile needs --trace-dir")
+        with jax_profile(args.trace_dir):
+            res = eng.run(sampler, eval_batch, steps=args.steps,
+                          seed=args.seed, eval_every=args.eval_every,
+                          on_eval=on_eval)
+    else:
+        res = eng.run(sampler, eval_batch, steps=args.steps, seed=args.seed,
+                      eval_every=args.eval_every, on_eval=on_eval)
     for row in res.as_rows():
         print(f"step {row['step']:4d} val-loss={row['upper_loss']:.4f} "
               f"train-obj={row['lower_loss']:.4f} "
               f"consensus_x={row['consensus_x']:.2e}", flush=True)
     print(f"wall={res.wall_time_s:.1f}s "
           f"({args.steps / max(res.wall_time_s, 1e-9):.2f} steps/s)")
+    for p in finalize_obs():
+        print("obs:", p)
     if args.ckpt_dir:
         print("checkpoints in", args.ckpt_dir)
 

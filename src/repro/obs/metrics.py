@@ -1,0 +1,213 @@
+"""Device-side metric accumulation: the in-scan half of ``repro.obs``.
+
+A :class:`MetricSpec` names one metric and gives a *pure-JAX* function that
+reads one step's context; a :class:`MetricSet` turns a list of specs into a
+zero accumulator tree (:meth:`MetricSet.init`), a per-step update
+(:meth:`MetricSet.update` — traced into the engine's fused scan, so metric
+accumulation costs zero host round-trips), and a host-side
+:meth:`MetricSet.drain` run once per chunk boundary, where the engine is
+already touching the host anyway.
+
+Three kinds:
+
+* ``counter`` — a float32 scalar; the spec's fn returns the per-step
+  increment (e.g. bytes shipped per gossip round).
+* ``mean`` — a (sum, count) pair; drained as sum / count (chunk-mean of a
+  per-step scalar: consensus error, update norms, estimator norms).
+* ``hist`` — a (bins,) int32 count vector; the fn returns the per-step count
+  *increment* vector (e.g. a bincount of async-gossip edge ages).
+
+The step context is a plain dict: ``{"old": state before the step, "new":
+state after, "mix_states": tuple of stateful-mix carry slots or None}``.
+Spec fns must be pure JAX (they run inside ``lax.scan``); ``drain`` is the
+ONLY host-side code here and is never traced.
+
+:func:`trainer_metric_set` builds the engine's standard trainer set from the
+abstract state / mix-site shapes the Engine already discovers: consensus
+error, parameter-update norms, the hypergradient-estimator norm, compressed
+payload bytes per mix round, and — for ``async_gossip`` — the realized
+per-edge staleness histogram read off the age counters the mix carries
+through the scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+KINDS = ("counter", "mean", "hist")
+
+
+@dataclasses.dataclass(frozen=True)
+class MetricSpec:
+    """One named metric: ``fn(ctx) -> jax.Array`` evaluated once per step.
+
+    ``fn`` returns a scalar for ``counter``/``mean`` and a (bins,) int32
+    increment vector for ``hist``."""
+
+    name: str
+    kind: str
+    fn: Callable[[dict], Any]
+    bins: int = 0
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(f"kind must be one of {KINDS}, got {self.kind!r}")
+        if self.kind == "hist" and self.bins < 1:
+            raise ValueError(f"hist metric {self.name!r} needs bins >= 1")
+
+
+class MetricSet:
+    """A fixed registry of :class:`MetricSpec` with scan-friendly semantics:
+    ``init() -> acc``, ``update(acc, ctx) -> acc`` (pure JAX, carried through
+    the scan), ``drain(acc) -> [(name, kind, python value)]`` (host side)."""
+
+    def __init__(self, specs: list[MetricSpec]):
+        names = [s.name for s in specs]
+        if len(set(names)) != len(names):
+            raise ValueError(f"duplicate metric names in {names}")
+        self.specs = tuple(specs)
+
+    def __len__(self) -> int:
+        return len(self.specs)
+
+    def init(self) -> dict:
+        acc: dict[str, Any] = {}
+        for s in self.specs:
+            if s.kind == "counter":
+                acc[s.name] = jnp.zeros((), jnp.float32)
+            elif s.kind == "mean":
+                acc[s.name] = (jnp.zeros((), jnp.float32),
+                               jnp.zeros((), jnp.float32))
+            else:
+                acc[s.name] = jnp.zeros((s.bins,), jnp.int32)
+        return acc
+
+    def update(self, acc: dict, ctx: dict) -> dict:
+        out = dict(acc)
+        for s in self.specs:
+            v = s.fn(ctx)
+            if s.kind == "counter":
+                out[s.name] = acc[s.name] + jnp.asarray(v, jnp.float32)
+            elif s.kind == "mean":
+                tot, cnt = acc[s.name]
+                out[s.name] = (tot + jnp.asarray(v, jnp.float32), cnt + 1.0)
+            else:
+                out[s.name] = acc[s.name] + jnp.asarray(v, jnp.int32)
+        return out
+
+    def drain(self, acc: dict) -> list[tuple[str, str, Any]]:
+        """Host-side read-out of one chunk's accumulator (NOT traced)."""
+        rows: list[tuple[str, str, Any]] = []
+        for s in self.specs:
+            if s.kind == "counter":
+                rows.append((s.name, "counter", float(np.asarray(acc[s.name]))))
+            elif s.kind == "mean":
+                tot, cnt = (float(np.asarray(x)) for x in acc[s.name])
+                rows.append((s.name, "mean", tot / max(cnt, 1.0)))
+            else:
+                rows.append((s.name, "hist",
+                             np.asarray(acc[s.name]).astype(np.int64)))
+        return rows
+
+
+# ---------------------------------------------------------------------------
+# Spec-building helpers (pure JAX fns over the engine's step context)
+# ---------------------------------------------------------------------------
+
+def tree_l2(tree) -> jax.Array:
+    """Global l2 norm over every leaf of a pytree."""
+    sq = jax.tree.reduce(
+        jnp.add, jax.tree.map(lambda a: jnp.sum(jnp.square(
+            a.astype(jnp.float32))), tree))
+    return jnp.sqrt(sq)
+
+
+def tree_diff_l2(new, old) -> jax.Array:
+    return tree_l2(jax.tree.map(lambda a, b: a - b, new, old))
+
+
+def _site_bytes(site_shapes, ratio: float, weights) -> int:
+    """Communicated bytes per gossip round for one mix call site, computed
+    statically from abstract shapes (mirrors
+    :func:`repro.core.compression.comm_bytes_per_mix` without needing
+    concrete arrays)."""
+    if weights is None:
+        degree = 2  # ring
+    else:
+        W = np.asarray(weights)
+        off = (np.abs(W) > 0) & ~np.eye(W.shape[0], dtype=bool)
+        degree = int(off.sum(axis=1).max())
+    total = 0
+    for sd in jax.tree.leaves(site_shapes):
+        size = int(math.prod(sd.shape))
+        d = size // max(sd.shape[0], 1) if sd.shape else 1
+        kept = max(int(d * ratio), 1)
+        per_entry = np.dtype(sd.dtype).itemsize + (4 if ratio < 1.0 else 0)
+        total += degree * kept * per_entry
+    return total
+
+
+def staleness_hist_fn(bins: int) -> Callable[[dict], jax.Array]:
+    """Histogram increment over the async-gossip age counters: one count per
+    directed in-edge per mix call site per step, binned by realized age (the
+    age of the cached value each node actually mixed with this round)."""
+
+    def fn(ctx):
+        h = jnp.zeros((bins,), jnp.int32)
+        for st in ctx["mix_states"] or ():
+            for ages in (st["age_left"], st["age_right"]):
+                h = h + jnp.bincount(jnp.clip(ages, 0, bins - 1),
+                                     length=bins).astype(jnp.int32)
+        return h
+
+    return fn
+
+
+def trainer_metric_set(state, *, mix=None, mix_sites=(), ratio: float = 1.0,
+                       weights=None) -> MetricSet:
+    """The Engine's standard in-scan trainer metrics.
+
+    ``state`` is the (abstract or concrete) node-stacked algorithm state at
+    t=0; ``mix_sites`` are the per-call-site shape trees the engine discovers
+    with ``eval_shape``; ``ratio``/``weights`` parameterize the static
+    bytes-per-round estimate; ``mix`` (the live mix object) opts in the
+    async staleness histogram when it carries ``tau`` age counters."""
+    specs = [
+        MetricSpec("train_consensus_x", "mean",
+                   lambda ctx: _consensus(ctx["new"].x)),
+        MetricSpec("train_consensus_y", "mean",
+                   lambda ctx: _consensus(ctx["new"].y)),
+        MetricSpec("train_update_norm_x", "mean",
+                   lambda ctx: tree_diff_l2(ctx["new"].x, ctx["old"].x)),
+        MetricSpec("train_update_norm_y", "mean",
+                   lambda ctx: tree_diff_l2(ctx["new"].y, ctx["old"].y)),
+    ]
+    if hasattr(state, "u"):
+        specs.append(MetricSpec("train_hypergrad_norm_u", "mean",
+                                lambda ctx: tree_l2(ctx["new"].u)))
+    if mix_sites:
+        bytes_per_step = sum(_site_bytes(t, ratio, weights)
+                             for t in mix_sites)
+        specs.append(MetricSpec(
+            "train_mix_bytes", "counter",
+            lambda ctx, b=float(bytes_per_step): jnp.float32(b)))
+    tau = getattr(mix, "tau", None)
+    if tau is not None and getattr(mix, "stateful", False):
+        bins = int(tau) + 1
+        specs.append(MetricSpec("train_staleness", "hist",
+                                staleness_hist_fn(bins), bins=bins))
+    return MetricSet(specs)
+
+
+def _consensus(tree) -> jax.Array:
+    # local copy of core.common.consensus_error to keep obs import-light
+    # (obs must be importable without pulling the whole core package)
+    def leaf(a):
+        mean = jnp.mean(a, axis=0, keepdims=True)
+        return jnp.sum((a - mean) ** 2) / a.shape[0]
+    return jax.tree.reduce(jnp.add, jax.tree.map(leaf, tree))

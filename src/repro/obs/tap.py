@@ -1,0 +1,44 @@
+"""Opt-in in-scan host taps via ``jax.debug.callback``.
+
+The engine's default obs path NEVER crosses to the host inside the scan —
+metrics accumulate in the carry and drain at chunk boundaries. But while
+*debugging* a divergence you sometimes want per-step values streamed out of
+the middle of a fused chunk without changing dispatch to per-step. That is
+what a tap is: a pure-JAX-callable hook that smuggles a (small) value to the
+recorder through ``jax.debug.callback``.
+
+This is the one place in the repo that legitimately calls a host callback
+from traced code, and the ``repro.analysis`` HOST_SYNC rule carries an
+explicit allowance for ``src/repro/obs/`` for exactly this reason (see
+``repro.analysis.ast_rules.OBS_CALLBACK_ALLOWANCE``). Taps are debug-only:
+they are ordered but asynchronous (the callback runs when the device step
+completes, not inline), and they DO cost host round-trips — never leave one
+enabled in a benchmarked path.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_tap(recorder, name: str):
+    """Return ``tap(step, value) -> None``, safe to call inside traced code.
+
+    ``value`` must be a scalar or small array; it arrives at the recorder as
+    an ordered ``tap`` event. With a :class:`NullRecorder` the tap is the
+    identity (no callback is even staged), so guarded call sites cost
+    nothing when obs is off.
+    """
+    if not getattr(recorder, "enabled", False):
+        def _noop(step, value):
+            return None
+        return _noop
+
+    def _emit(step, value):
+        recorder.event("tap", name=name, step=int(step),
+                       value=np.asarray(value))
+
+    def tap(step, value):
+        jax.debug.callback(_emit, step, value, ordered=True)
+
+    return tap

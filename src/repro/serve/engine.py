@@ -61,10 +61,18 @@ class ServeEngine:
                  max_batch: int = 8, eos_id: int | None = None,
                  mode: str = "continuous", decode_chunk: int = 8,
                  prefill_bucket: bool = False, block_size: int = 16,
-                 num_blocks: int | None = None):
+                 num_blocks: int | None = None, recorder=None):
         if mode not in ("continuous", "cohort", "paged"):
             raise ValueError(
                 f"mode must be continuous|cohort|paged, got {mode!r}")
+        if recorder is None:
+            from repro.obs.recorder import NullRecorder
+            recorder = NullRecorder()
+        # Host-side only: the recorder sees counters/spans at the chunk
+        # boundaries the loop already crosses and never touches the device
+        # computation, so streams are bitwise identical with obs on or off
+        # (pinned in tests/test_serve_obs.py).
+        self.recorder = recorder
         self.cfg, self.params = cfg, params
         self.capacity, self.max_batch = capacity, max_batch
         self.eos_id, self.mode, self.decode_chunk = eos_id, mode, decode_chunk
@@ -129,6 +137,7 @@ class ServeEngine:
             total = len(prompt) + max_new_tokens
             if (total > self.capacity
                     or self.pool.blocks_for(total) > self.pool.num_blocks):
+                self.recorder.counter_add("serve_submit_rejects")
                 raise ValueError(
                     f"request needs {total} cache positions "
                     f"({self.pool.blocks_for(total)} blocks); pool holds "
@@ -139,7 +148,28 @@ class ServeEngine:
         req = Request(rid, prompt, max_new_tokens,
                       submit_s=time.perf_counter())
         self.scheduler.submit(req)
+        self.recorder.counter_add("serve_submitted")
+        self.recorder.instant("submit", rid=rid, prompt_len=len(prompt),
+                              budget=max_new_tokens)
         return rid
+
+    def _record_done(self, req: Request) -> None:
+        """Per-request latency accounting at completion: TTFT, end-to-end
+        latency, mean inter-token gap, and a ``request_done`` event keyed by
+        rid (what tests/test_serve_obs.py asserts against)."""
+        rec = self.recorder
+        if not rec.enabled:
+            return
+        ttft = (req.first_token_s - req.submit_s) if req.first_token_s else 0.0
+        latency = (req.finish_s - req.submit_s) if req.finish_s else 0.0
+        rec.counter_add("serve_finished")
+        rec.observe("serve_ttft_s", ttft)
+        rec.observe("serve_latency_s", latency)
+        if req.first_token_s and req.finish_s and len(req.output) > 1:
+            rec.observe("serve_itl_s", (req.finish_s - req.first_token_s)
+                        / (len(req.output) - 1))
+        rec.event("request_done", rid=req.rid, ttft_s=ttft,
+                  latency_s=latency, tokens=len(req.output))
 
     # -- shared helpers ------------------------------------------------------
 
@@ -195,9 +225,11 @@ class ServeEngine:
 
     def _prefill_first_token(self, req: Request):
         """Run the admission prefill; returns (first_token, request cache)."""
-        logits, req_cache = self._prefill(self.params,
-                                          self._admission_batch(req))
-        first = int(jnp.argmax(logits[0, -1]))
+        with self.recorder.span("prefill", rid=req.rid,
+                                prompt_len=len(req.prompt)):
+            logits, req_cache = self._prefill(self.params,
+                                              self._admission_batch(req))
+            first = int(jnp.argmax(logits[0, -1]))
         if not req.first_token_s:
             req.first_token_s = time.perf_counter()
         return first, req_cache
@@ -225,13 +257,16 @@ class ServeEngine:
             live[i] = False
             remaining[i] = 0
             self.completed[req.rid] = req
+            self._record_done(req)
             return req
 
+        t0 = time.perf_counter()
         try:
             yield from self._continuous_loop(sched, cache, tok, live,
                                              remaining, stats, finish)
         finally:
             self.stats = stats
+            self._export_stats(stats, time.perf_counter() - t0)
             self._evict_in_flight()
 
     def _continuous_loop(self, sched, cache, tok, live, remaining, stats,
@@ -253,11 +288,13 @@ class ServeEngine:
                 yield from self._emit([req])
             stats["peak_concurrency"] = max(stats["peak_concurrency"],
                                             len(sched.occupied()))
+            self._boundary_gauges(stats)
             if not live.any():
                 continue  # queue may still hold work; otherwise loop exits
-            out = self._fused_decode(
-                self.params, jnp.asarray(tok), cache,
-                jnp.asarray(live), jnp.asarray(remaining))
+            with self.recorder.span("decode_chunk", steps=self.decode_chunk):
+                out = self._fused_decode(
+                    self.params, jnp.asarray(tok), cache,
+                    jnp.asarray(live), jnp.asarray(remaining))
             tok_d, cache, live_d, remaining_d, tokens, emitted = out
             # in place: finish() closes over these same arrays
             tok[:], live[:] = np.asarray(tok_d), np.asarray(live_d)
@@ -269,6 +306,32 @@ class ServeEngine:
             for i in sched.record_decode(tokens, emitted, eos):
                 finish(i)
             yield from self._emit(reqs)
+
+    def _boundary_gauges(self, stats: dict) -> None:
+        """Chunk-boundary gauges: queue depth, concurrency, pool occupancy."""
+        rec = self.recorder
+        if not rec.enabled:
+            return
+        rec.gauge_set("serve_queue_depth", len(self.scheduler.queue))
+        rec.gauge_set("serve_concurrency", len(self.scheduler.occupied()))
+        if self.pool is not None:
+            rec.gauge_set("serve_free_blocks", self.pool.free_blocks)
+            rec.gauge_set("serve_block_occupancy",
+                          1.0 - self.pool.free_blocks / self.pool.num_blocks)
+
+    def _export_stats(self, stats: dict, elapsed_s: float) -> None:
+        """Mirror the drain's stats dict into the recorder (``serve_``
+        prefix) plus the realized tokens/sec for the whole drain."""
+        rec = self.recorder
+        if not rec.enabled:
+            return
+        for k, v in stats.items():
+            rec.gauge_set(f"serve_{k}", v)
+        tps = stats.get("emitted_tokens", 0) / max(elapsed_s, 1e-9)
+        rec.gauge_set("serve_tokens_per_sec", tps)
+        rec.event("drain_done", elapsed_s=elapsed_s, tokens_per_sec=tps,
+                  **stats)
+        rec.flush()
 
     def _evict_in_flight(self) -> None:
         """Return in-flight requests to the queue front (youngest first, so
@@ -302,20 +365,26 @@ class ServeEngine:
             live[i] = False
             remaining[i] = 0
             self.completed[req.rid] = req
+            self._record_done(req)
             return req
 
         def preempt(i: int) -> None:
             pool.release(i)
-            sched.preempt(i)
+            req = sched.preempt(i)
             live[i] = False
             remaining[i] = 0
             stats["preemptions"] += 1
+            self.recorder.counter_add("serve_preemptions")
+            self.recorder.instant("preempt", rid=req.rid,
+                                  regenerated=len(req.output))
 
+        t0 = time.perf_counter()
         try:
             yield from self._paged_loop(tok, idx, live, remaining, stats,
                                         finish, preempt)
         finally:
             self.stats = stats
+            self._export_stats(stats, time.perf_counter() - t0)
             self._evict_in_flight()
 
     def _paged_loop(self, tok, idx, live, remaining, stats, finish, preempt):
@@ -333,6 +402,10 @@ class ServeEngine:
             def can_admit(r) -> bool:
                 need = pool.blocks_for(len(r.prompt) + 1)
                 if claimed[0] + need > pool.free_blocks:
+                    # deterministic given the workload: admission is pure
+                    # host-side scheduling, so this counter is identical
+                    # whether obs is on or off
+                    self.recorder.counter_add("serve_admission_rejects")
                     return False
                 claimed[0] += need
                 return True
@@ -375,12 +448,14 @@ class ServeEngine:
                     preempt(victim)
                     if victim == i:
                         break
+            self._boundary_gauges(stats)
             if not live.any():
                 continue
-            out = self._paged_decode(
-                self.params, jnp.asarray(tok), pool.data,
-                jnp.asarray(pool.tables), jnp.asarray(idx),
-                jnp.asarray(live), jnp.asarray(remaining))
+            with self.recorder.span("decode_chunk", steps=chunk):
+                out = self._paged_decode(
+                    self.params, jnp.asarray(tok), pool.data,
+                    jnp.asarray(pool.tables), jnp.asarray(idx),
+                    jnp.asarray(live), jnp.asarray(remaining))
             tok_d, pool.data, idx_d, live_d, remaining_d, tokens, emitted = out
             # in place: finish()/preempt() close over these same arrays
             tok[:], idx[:] = np.asarray(tok_d), np.asarray(idx_d)
@@ -407,6 +482,7 @@ class ServeEngine:
         sched = self.scheduler
         stats = {"prefills": 0, "decode_dispatches": 0, "decode_steps": 0,
                  "emitted_tokens": 0, "peak_concurrency": 0}
+        t0 = time.perf_counter()
         while sched.queue:
             reqs = [sched.queue.popleft()
                     for _ in range(min(self.max_batch, len(sched.queue)))]
@@ -438,8 +514,10 @@ class ServeEngine:
                 r.finish_s = now
                 results[r.rid] = r.output
                 self.completed[r.rid] = r
+                self._record_done(r)
             sched.n_finished += len(reqs)
         self.stats = stats
+        self._export_stats(stats, time.perf_counter() - t0)
         return results
 
     # -- entry points --------------------------------------------------------

@@ -91,7 +91,7 @@ def make_problem(model_cfg: ModelConfig, tc: TrainerConfig):
 def make_trainer_engine(model_cfg: ModelConfig, tc: TrainerConfig, K: int, *,
                         mesh=None, axis_name: str = "data",
                         dispatch: str = "fused", mix: str | None = None,
-                        mix_kwargs: dict | None = None):
+                        mix_kwargs: dict | None = None, recorder=None):
     """Build the Engine that runs the decentralized LM trainer.
 
     Returns ``(problem, engine)``. With a ``mesh``, the node axis is
@@ -111,7 +111,7 @@ def make_trainer_engine(model_cfg: ModelConfig, tc: TrainerConfig, K: int, *,
         name = "ring_local"
     eng = Engine(problem, hcfg, tc.hp, K, algo=tc.algo, mix=name,
                  dispatch=dispatch, mesh=mesh, axis_name=axis_name,
-                 mix_kwargs=mix_kwargs)
+                 mix_kwargs=mix_kwargs, recorder=recorder)
     return problem, eng
 
 
