@@ -253,6 +253,35 @@ _rule(
 )
 
 _rule(
+    id="KERNEL_ORACLE",
+    engine="contracts",
+    title="Pallas kernel without a registered jnp oracle and parity test",
+    rationale=(
+        "Every module-level function in src/repro/kernels/ that stages a "
+        "`pl.pallas_call` must appear in `repro.kernels.KERNEL_ORACLES` "
+        "naming (a) a pure-jnp reference defined in repro.kernels.ref and "
+        "(b) a test file that exercises both names. A hand-written kernel "
+        "with no independent oracle has no ground truth: a tail-mask or "
+        "block-index bug produces plausible numbers, not a crash, and only "
+        "shows up as silently wrong model output. The paired reference is "
+        "also what the `use_pallas` policy dispatches to off-TPU, so an "
+        "unregistered kernel means CPU CI and TPU run *unrelated* code. "
+        "The check also fires on stale registry entries (kernel renamed or "
+        "deleted) and on test files that never mention the kernel/oracle "
+        "pair — registration without an actual comparison is not hygiene."),
+    bad="""\
+def my_kernel(x, *, interpret=False):
+    return pl.pallas_call(_body, ...)(x)   # no KERNEL_ORACLES entry
+""",
+    good="""\
+# kernels/__init__.py
+KERNEL_ORACLES["my_kernel"] = ("my_kernel_ref", "tests/test_kernels.py")
+# kernels/ref.py defines my_kernel_ref; the test sweeps
+# my_kernel(..., interpret=True) against it.
+""",
+)
+
+_rule(
     id="BAD_NOQA",
     engine="meta",
     title="suppression without a reason (or naming an unknown rule)",

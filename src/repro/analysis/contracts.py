@@ -14,6 +14,13 @@
   *every* ensure/release sequence up to a fixed depth on a tiny allocator —
   exhaustive, so a regression that leaks only on a rare interleaving still
   fails deterministically.
+* **KERNEL_ORACLE** — every module-level function in
+  ``src/repro/kernels/`` that stages a ``pl.pallas_call`` is registered in
+  :data:`repro.kernels.KERNEL_ORACLES` with a pure-jnp reference that
+  exists in :mod:`repro.kernels.ref` and a parity test file that exercises
+  both names (the interpret-mode sweep CPU CI runs). A kernel without an
+  oracle has no independent ground truth — a masking or indexing bug would
+  only surface as wrong model output.
 * **TRACE_FAIL** — every registered entry point (algorithm × mix, serve
   chunks, data samplers) traces; produced by
   :func:`repro.analysis.entrypoints.trace_all`, re-exported here for the
@@ -25,9 +32,11 @@ implementations and assert the rule fires.
 """
 from __future__ import annotations
 
+import ast
 import copy
 import inspect
 import itertools
+import pathlib
 from typing import Callable
 
 from repro.analysis.findings import Finding
@@ -35,6 +44,7 @@ from repro.analysis.findings import Finding
 _MIX_PATH = "src/repro/core/engine.py"
 _TOPO_PATH = "src/repro/core/topology.py"
 _POOL_PATH = "src/repro/serve/batch.py"
+_KERNELS_DIR = "src/repro/kernels"
 
 
 # ---------------------------------------------------------------------------
@@ -238,11 +248,117 @@ def check_blockpool_spec(factory: Callable[[], object] | None = None,
 
 
 # ---------------------------------------------------------------------------
+# Kernel hygiene: every pallas_call entry point has an oracle + parity test
+# ---------------------------------------------------------------------------
+
+def _pallas_sites(source: str) -> dict[str, int]:
+    """Module-level function name -> line of its first ``pallas_call``.
+
+    The enclosing *module-level* def is the unit of registration: the
+    private ``_*_kernel`` body functions never call ``pallas_call``
+    themselves, the public staging wrapper does."""
+    sites: dict[str, int] = {}
+    for node in ast.parse(source).body:
+        if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+        for sub in ast.walk(node):
+            if not isinstance(sub, ast.Call):
+                continue
+            fn = sub.func
+            callee = fn.attr if isinstance(fn, ast.Attribute) else getattr(
+                fn, "id", None)
+            if callee == "pallas_call" and node.name not in sites:
+                sites[node.name] = sub.lineno
+    return sites
+
+
+def check_kernel_oracles(sources: dict[str, str] | None = None,
+                         registry: dict[str, tuple[str, str]] | None = None,
+                         oracle_names: set[str] | None = None,
+                         test_sources: dict[str, str] | None = None,
+                         ) -> list[Finding]:
+    """Every ``pl.pallas_call`` staging function in ``src/repro/kernels/``
+    must be registered in ``KERNEL_ORACLES`` with (a) a reference that
+    exists in ``repro.kernels.ref`` and (b) a parity test file that
+    mentions both the kernel and its oracle — and the registry must not
+    hold entries for kernels that no longer exist.
+
+    Subjects are injectable for the self-test corpus: ``sources`` maps
+    repo-relative path -> kernel module source, ``registry`` is a
+    ``KERNEL_ORACLES``-shaped dict, ``oracle_names`` the public names of
+    the reference module, ``test_sources`` maps repo-relative test path ->
+    text (a missing key means the file does not exist)."""
+    if sources is None:
+        import repro.kernels
+        pkg = pathlib.Path(repro.kernels.__file__).parent
+        sources = {f"{_KERNELS_DIR}/{p.name}": p.read_text()
+                   for p in sorted(pkg.glob("*.py"))}
+    if registry is None:
+        from repro.kernels import KERNEL_ORACLES
+        registry = KERNEL_ORACLES
+    if oracle_names is None:
+        from repro.kernels import ref
+        oracle_names = {n for n in vars(ref) if not n.startswith("_")}
+    if test_sources is None:
+        import repro.kernels
+        # src/repro/kernels/__init__.py -> repo root (repro itself is a
+        # namespace package with no __file__)
+        root = pathlib.Path(repro.kernels.__file__).resolve().parents[3]
+        test_sources = {}
+        for _, test_path in registry.values():
+            p = root / test_path
+            if p.is_file():
+                test_sources[test_path] = p.read_text()
+
+    out: list[Finding] = []
+    staged: set[str] = set()
+    for path in sorted(sources):
+        for fn_name, line in sorted(_pallas_sites(sources[path]).items()):
+            staged.add(fn_name)
+            if fn_name not in registry:
+                out.append(Finding(
+                    rule="KERNEL_ORACLE", path=path, line=line,
+                    message=f"{fn_name}() stages pl.pallas_call but has no "
+                            "KERNEL_ORACLES entry — register a jnp "
+                            "reference and a parity test"))
+
+    reg_path = f"{_KERNELS_DIR}/__init__.py"
+    for name, (oracle, test_path) in sorted(registry.items()):
+        if name not in staged:
+            out.append(Finding(
+                rule="KERNEL_ORACLE", path=reg_path, line=0,
+                message=f"KERNEL_ORACLES entry {name!r} matches no "
+                        "pallas_call staging function — stale registration"))
+            continue
+        if oracle not in oracle_names:
+            out.append(Finding(
+                rule="KERNEL_ORACLE", path=f"{_KERNELS_DIR}/ref.py", line=0,
+                message=f"kernel {name!r} names oracle {oracle!r}, which "
+                        "repro.kernels.ref does not define"))
+        text = test_sources.get(test_path)
+        if text is None:
+            out.append(Finding(
+                rule="KERNEL_ORACLE", path=reg_path, line=0,
+                message=f"kernel {name!r} names parity test file "
+                        f"{test_path!r}, which does not exist"))
+        else:
+            missing = [n for n in (name, oracle) if n not in text]
+            if missing:
+                out.append(Finding(
+                    rule="KERNEL_ORACLE", path=test_path, line=0,
+                    message=f"parity test file for kernel {name!r} never "
+                            f"mentions {missing} — the kernel is not "
+                            "actually compared against its oracle"))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Aggregate
 # ---------------------------------------------------------------------------
 
 def check_all() -> list[Finding]:
-    """Registry-level contracts (mix protocol, topologies, allocator spec).
-    Entry-point tracing (TRACE_FAIL) runs via entrypoints.trace_all."""
+    """Registry-level contracts (mix protocol, topologies, allocator spec,
+    kernel/oracle pairing). Entry-point tracing (TRACE_FAIL) runs via
+    entrypoints.trace_all."""
     return (check_mix_protocol() + check_topologies()
-            + check_blockpool_spec())
+            + check_blockpool_spec() + check_kernel_oracles())

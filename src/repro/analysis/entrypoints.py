@@ -162,6 +162,28 @@ def _serve_paged_build():
     return fn, (_sds(params), tok, _sds(pool.data), tables, idx, live, rem)
 
 
+def _serve_paged_kernel_build():
+    # Block-native read path (forced Pallas, interpret=True so it traces on
+    # CPU): same signature as the reference paged chunk.
+    from repro.models import init_params
+    from repro.serve.batch import BlockPool
+    from repro.serve.steps import make_paged_kernel_decode
+    cfg = _tiny_model_cfg()
+    B, capacity, block_size, chunk_len = 2, 32, 8, 4
+    pool = BlockPool(cfg, num_blocks=B * capacity // block_size,
+                     block_size=block_size, max_batch=B, capacity=capacity)
+    fn = make_paged_kernel_decode(cfg, block_size, chunk_len, eos_id=2,
+                                  impl="pallas", interpret=True)
+    params = jax.eval_shape(lambda k: init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    tok = jax.ShapeDtypeStruct((B,), np.int32)
+    tables = jax.ShapeDtypeStruct((B, pool.max_blocks), np.int32)
+    idx = jax.ShapeDtypeStruct((B,), np.int32)
+    live = jax.ShapeDtypeStruct((B,), np.bool_)
+    rem = jax.ShapeDtypeStruct((B,), np.int32)
+    return fn, (_sds(params), tok, _sds(pool.data), tables, idx, live, rem)
+
+
 # ---------------------------------------------------------------------------
 # Data: device-resident samplers per model family
 # ---------------------------------------------------------------------------
@@ -193,6 +215,9 @@ def iter_entries(tags: tuple[str, ...] | None = None) -> list[EntryPoint]:
                               build=_serve_fused_build, tags=("serve",)))
     entries.append(EntryPoint(name="serve:paged_decode",
                               build=_serve_paged_build, tags=("serve",)))
+    entries.append(EntryPoint(name="serve:paged_kernel_decode",
+                              build=_serve_paged_kernel_build,
+                              tags=("serve",)))
     for arch, kw in (("smollm-360m", {}),
                      ("chameleon-34b", {"n_img_tokens": 4}),
                      ("whisper-tiny", {"src_len": 8})):

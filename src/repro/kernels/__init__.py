@@ -1,9 +1,27 @@
 # TPU-target Pallas kernels for the substrate's compute hot-spots
 # (the paper itself has no kernel-level contribution — see DESIGN.md §3).
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.ops import attention, on_tpu, rglru
-from repro.kernels.ref import attention_ref, rglru_ref
+from repro.kernels.ops import attention, on_tpu, paged_attention, rglru
+from repro.kernels.paged_attention import paged_attention as paged_attention_pallas
+from repro.kernels.ref import (attention_ref, paged_attention_ref, rglru_ref,
+                               wkv6_ref)
 from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.wkv6_scan import wkv6_scan
 
-__all__ = ["attention", "attention_ref", "flash_attention", "on_tpu",
-           "rglru", "rglru_ref", "rglru_scan"]
+# Kernel hygiene registry, enforced by repro.analysis (KERNEL_ORACLE rule):
+# every module-level function in this package that stages a ``pl.pallas_call``
+# must appear here with its pure-jnp oracle and the test module that pins
+# kernel-vs-oracle parity in interpret mode. Landing a kernel without an
+# entry (or with a dangling oracle/test reference) fails the lint gate.
+KERNEL_ORACLES: dict[str, tuple[str, str]] = {
+    # kernel fn -> (oracle fn in repro.kernels.ref, parity test module)
+    "flash_attention": ("attention_ref", "tests/test_kernels.py"),
+    "rglru_scan": ("rglru_ref", "tests/test_kernels.py"),
+    "wkv6_scan": ("wkv6_ref", "tests/test_wkv_kernel.py"),
+    "paged_attention": ("paged_attention_ref", "tests/test_kernels.py"),
+}
+
+__all__ = ["KERNEL_ORACLES", "attention", "attention_ref", "flash_attention",
+           "on_tpu", "paged_attention", "paged_attention_pallas",
+           "paged_attention_ref", "rglru", "rglru_ref", "rglru_scan",
+           "wkv6_ref", "wkv6_scan"]

@@ -11,7 +11,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.ref import attention_ref, rglru_ref
+from repro.kernels.paged_attention import paged_attention as paged_attention_kernel
+from repro.kernels.ref import attention_ref, paged_attention_ref, rglru_ref
 from repro.kernels.rglru_scan import rglru_scan
 
 
@@ -29,6 +30,21 @@ def attention(q, k, v, *, causal: bool = True, window: int | None = None,
                                interpret=(not on_tpu()) if interpret is None
                                else interpret)
     return attention_ref(q, k, v, causal=causal, window=window)
+
+
+def paged_attention(q, k_pages, v_pages, tables, lengths, layer=0, *,
+                    force_pallas: bool = False, interpret: bool | None = None):
+    """Dispatch: Pallas block-table decode attention on TPU, jnp-gather
+    reference elsewhere.
+
+    Layout: q [B, H, Dh]; k_pages/v_pages [num_blocks + 1, block_size, L,
+    Hkv, Dh] (the ``BlockPool`` attention-KV layout); tables [B, n_pages]
+    int32; lengths [B] int32 (0 = dead slot)."""
+    if on_tpu() or force_pallas:
+        return paged_attention_kernel(
+            q, k_pages, v_pages, tables, lengths, layer,
+            interpret=(not on_tpu()) if interpret is None else interpret)
+    return paged_attention_ref(q, k_pages, v_pages, tables, lengths, layer)
 
 
 def rglru(a, x, *, force_pallas: bool = False, interpret: bool | None = None):

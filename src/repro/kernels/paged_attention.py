@@ -1,0 +1,149 @@
+"""Paged decode attention (TPU Pallas): one new query token per slot attends
+over that slot's KV pages *through its block table* — the physical pool is
+never materialized into a per-slot dense logical cache.
+
+TPU-native design notes (vs the dense ``_flash_kernel``):
+  * Grid is (B, Hkv, n_pages) with the page dimension innermost — the
+    online-softmax running state (m, l, acc) lives in VMEM scratch persisting
+    across a slot's pages, exactly like the k-block dimension of the flash
+    kernel.
+  * The block table and per-slot lengths are **scalar-prefetch** operands
+    (``pltpu.PrefetchScalarGridSpec``): the k/v BlockSpec index_map reads
+    ``tables[b, j]`` to aim each page DMA at a physical block, so only the
+    pages a slot actually owns are ever pulled from HBM.
+  * Pages past a slot's used length are clamped to the *last valid* page in
+    the index_map — consecutive grid steps with an unchanged block index skip
+    the DMA (TPU revolving-buffer rule), so dead/out-of-range pages cost
+    neither bandwidth nor compute (their math is ``pl.when``-pruned).
+  * Tail-block masking: the last page is partially filled; a positional
+    ``pos < length`` mask zeroes the unwritten lanes, which is what keeps
+    trash-block garbage (dead slots, unallocated table entries) out of every
+    result.
+  * GQA is native: the grid iterates KV heads and each program computes all
+    ``G = H // Hkv`` grouped query heads against one loaded page, so grouped
+    configs serve without replicating K/V.
+
+The pool layout matches ``repro.serve.batch.BlockPool`` for attention
+families: ``[num_blocks + 1, block_size, L, Hkv, Dh]`` with the trailing
+trash block at index ``num_blocks``; ``layer`` selects the transformer layer
+so the serving layer-scan calls the kernel without slicing the pool.
+
+Validated on CPU with interpret=True against
+``repro.kernels.ref.paged_attention_ref`` (tests/test_kernels.py).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(tables_ref, lengths_ref, layer_ref, q_ref, k_ref, v_ref,
+                  o_ref, m_scr, l_scr, acc_scr, *, scale: float,
+                  block_size: int, n_pages: int):
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = lengths_ref[b]
+
+    # page-level pruning: a page whose first position is past the slot's used
+    # length holds nothing valid (dead slots have length 0 — every page skips)
+    @pl.when(j * block_size < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # [G, Dh]
+        k = k_ref[0, :, 0, 0].astype(jnp.float32)            # [bs, Dh]
+        v = v_ref[0, :, 0, 0].astype(jnp.float32)            # [bs, Dh]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # [G, bs]
+
+        # tail-block mask: only positions the slot has actually written
+        pos = j * block_size + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 1)
+        s = jnp.where(pos < length, s, NEG_INF)
+
+        m_prev = m_scr[...]                                  # [G, 1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                               # [G, bs]
+        alpha = jnp.exp(m_prev - m_new)                      # [G, 1]
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)   # dead slot: emit zeros, not NaN
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, tables, lengths, layer=0, *,
+                    interpret: bool = False):
+    """Block-table decode attention for one new token per slot.
+
+    q: [B, H, Dh] — the new token's queries (RoPE already applied).
+    k_pages/v_pages: [num_blocks + 1, block_size, L, Hkv, Dh] physical pool
+      (``BlockPool.data['kv']`` layout; the trailing block is trash).
+    tables: [B, n_pages] int32 — each slot's block table (possibly clamped to
+      the live high-water page count); unallocated entries point at trash.
+    lengths: [B] int32 — valid KV positions per slot (``idx + 1`` after the
+      tail append; 0 for dead slots, which then emit zeros).
+    layer: int32 scalar selecting the transformer layer inside the pool.
+
+    Returns [B, H, Dh] in q.dtype.
+    """
+    B, H, Dh = q.shape
+    _, block_size, L, Hkv, _ = k_pages.shape
+    assert H % Hkv == 0, (H, Hkv)
+    G = H // Hkv
+    n_pages = tables.shape[1]
+    scale = Dh ** -0.5
+    q4 = q.reshape(B, Hkv, G, Dh)
+
+    def kv_map(b, h, j, tables, lengths, layer):
+        # out-of-range pages re-target the slot's last valid page: the block
+        # index is unchanged from the previous grid step, so the DMA is
+        # skipped (compute is pruned by pl.when on the same predicate)
+        last = jnp.maximum(lengths[b] - 1, 0) // block_size
+        return (tables[b, jnp.minimum(j, last)], 0, layer[0], h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, Hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, Dh), lambda b, h, j, *refs: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_size, 1, 1, Dh), kv_map),
+            pl.BlockSpec((1, block_size, 1, 1, Dh), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, Dh),
+                               lambda b, h, j, *refs: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),    # running max m
+            pltpu.VMEM((G, 1), jnp.float32),    # running denom l
+            pltpu.VMEM((G, Dh), jnp.float32),   # fp32 accumulator
+        ],
+    )
+    kernel = functools.partial(_paged_kernel, scale=scale,
+                               block_size=block_size, n_pages=n_pages)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, G, Dh), q.dtype),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      jnp.asarray(layer, jnp.int32).reshape(1), q4, k_pages, v_pages)
+    return out.reshape(B, H, Dh)

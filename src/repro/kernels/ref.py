@@ -27,6 +27,35 @@ def attention_ref(q, k, v, *, causal: bool = True, window: int | None = None):
     return o.reshape(B, H, Sq, Dh).astype(q.dtype)
 
 
+def paged_attention_ref(q, k_pages, v_pages, tables, lengths, layer=0):
+    """Decode attention through a block table, full-softmax oracle.
+
+    q: [B, H, Dh] (one new token per slot); k_pages/v_pages:
+    [num_blocks + 1, block_size, L, Hkv, Dh] physical pool (trailing block is
+    trash); tables: [B, n_pages] int32; lengths: [B] int32 valid KV count per
+    slot (0 = dead slot -> zeros out); layer: which transformer layer to read.
+
+    Gathers each slot's pages into a dense [n_pages * block_size] logical
+    cache, then runs one masked softmax — the semantics the Pallas kernel's
+    online-softmax block walk must reproduce.
+    """
+    B, H, Dh = q.shape
+    _, block_size, _, Hkv, _ = k_pages.shape
+    G = H // Hkv
+    kl = jnp.take(k_pages, layer, axis=2)         # [N+1, bs, Hkv, Dh]
+    vl = jnp.take(v_pages, layer, axis=2)
+    k = kl[tables].reshape(B, -1, Hkv, Dh)        # [B, n_pages*bs, Hkv, Dh]
+    v = vl[tables].reshape(B, -1, Hkv, Dh)
+    qg = q.reshape(B, Hkv, G, Dh).astype(jnp.float32) * Dh ** -0.5
+    s = jnp.einsum("bhgd,bkhd->bhgk", qg, k.astype(jnp.float32))
+    valid = jnp.arange(s.shape[-1])[None] < lengths[:, None]   # [B, S]
+    s = jnp.where(valid[:, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # dead slots: fully-masked rows
+    o = jnp.einsum("bhgk,bkhd->bhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Dh).astype(q.dtype)
+
+
 def rglru_ref(a, x, h0=None):
     """Linear recurrence h_t = a_t * h_{t-1} + x_t. a/x: [B, S, R]."""
     B, S, R = a.shape

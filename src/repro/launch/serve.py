@@ -8,6 +8,8 @@ cohort drain stay available for comparison:
   python -m repro.launch.serve --arch qwen2.5-3b --reduced --mode cohort
   python -m repro.launch.serve --arch smollm-360m --reduced --mode paged \
       --block-size 8 --num-blocks 16
+  python -m repro.launch.serve --arch smollm-360m --reduced --mode paged \
+      --block-size 8 --kv-impl pallas   # force the kernel (interpret on CPU)
 """
 from __future__ import annotations
 
@@ -40,6 +42,13 @@ def main():
     ap.add_argument("--num-blocks", type=int, default=None,
                     help="physical KV blocks in the pool (paged mode; "
                          "default: max_batch*capacity/block_size)")
+    ap.add_argument("--kv-impl", choices=("auto", "kernel", "pallas",
+                                          "reference"), default="auto",
+                    help="paged attention implementation: block-native "
+                         "kernel (Pallas on TPU, jnp block-walk oracle "
+                         "elsewhere), forced Pallas (interpret off-TPU), "
+                         "or the bitwise gather/scatter reference; auto = "
+                         "kernel on TPU, reference elsewhere")
     ap.add_argument("--metrics", default=None, metavar="DIR",
                     help="write metrics.jsonl + metrics.prom into DIR")
     ap.add_argument("--trace-dir", default=None, metavar="DIR",
@@ -54,7 +63,7 @@ def main():
                       max_batch=args.max_batch, mode=args.mode,
                       decode_chunk=args.decode_chunk,
                       block_size=args.block_size, num_blocks=args.num_blocks,
-                      recorder=recorder)
+                      kv_impl=args.kv_impl, recorder=recorder)
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         prompt = rng.integers(0, cfg.vocab, size=rng.integers(3, 10))

@@ -1,0 +1,86 @@
+"""Block-native paged decode step for the attention-path families.
+
+``serve.steps.make_paged_decode`` (the jnp reference serving path) runs the
+unmodified ``models.decode_step`` per slot by *materializing* each slot's
+logical dense cache from the block pool every scan step — a
+``gather_pages`` → dense attention → ``scatter_token`` round trip whose HBM
+traffic scales with ``max_blocks × block_size`` per slot per token.
+
+This module is the read path that never builds the dense cache: per layer,
+the new token's K/V are appended straight into each slot's tail block (one
+scatter per pool leaf), then attention walks the block table itself via
+``repro.kernels.ops.paged_attention`` (Pallas on TPU, jnp-gather oracle on
+CPU). Everything outside attention — norms, QKV/output projections, MLP /
+per-slot MoE routing — is batched over slots in one program, replacing the
+per-slot vmap of the reference path.
+
+Only the full-attention KV families qualify (``dense``/``vlm``/``moe`` — the
+same ``PAGED_FAMILIES`` gate the engine enforces); their pool holds exactly
+two leaves ``{"kv": {"k", "v"}}`` of layout
+``[num_blocks + 1, block_size, L, Hkv, Dh]``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.attention import qkv
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_norm, dense, embed, mlp, rope, unembed
+from repro.models.moe import moe_mlp
+
+
+def paged_decode_step(cfg: ModelConfig, params, tok, pool_kv, tables, blk,
+                      off, positions, lengths, *, attend):
+    """One greedy-decode step for every slot, block-native.
+
+    tok: [B] int32 current tokens; pool_kv: ``{"k", "v"}`` physical pools
+    ``[num_blocks + 1, block_size, L, Hkv, Dh]``; tables: [B, n_pages] int32;
+    blk/off: [B] tail-block write coordinates for this step (``blk`` already
+    routed to the trash block for dead slots); positions: [B] absolute
+    position of the new token per slot; lengths: [B] valid KV count *after*
+    the tail append (``idx + 1`` live, 0 dead).
+
+    ``attend(q [B, H, Dh], k_pages, v_pages, tables, lengths, layer)`` is the
+    paged-attention implementation (kernel / forced-interpret / jnp oracle —
+    chosen by the serving layer).
+
+    Returns ``(logits [B, V], new pool_kv)``. Write-then-read semantics match
+    ``models.attention.decode_self_attention``: the new K/V land in the tail
+    block first, then attention covers positions ``< idx + 1``.
+    """
+    assert cfg.family in ("dense", "vlm", "moe"), cfg.family
+    B = tok.shape[0]
+    x = embed(cfg, params["embed"], tok[:, None])          # [B, 1, D]
+    pos = positions[:, None]                               # [B, 1]
+
+    def body(carry, xs):
+        h, pk, pv = carry
+        lp, layer = xs
+        hn = apply_norm(cfg, lp["norm1"], h)
+        q, k, v = qkv(cfg, lp["attn"], hn)                 # [B,1,H/Hkv,Dh]
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+        # fused tail append: one [B]-indexed scatter per pool leaf replaces
+        # the reference path's full-page scatter_token round trip
+        pk = pk.at[blk, off, layer].set(k[:, 0].astype(pk.dtype))
+        pv = pv.at[blk, off, layer].set(v[:, 0].astype(pv.dtype))
+        a = attend(q[:, 0], pk, pv, tables, lengths, layer)  # [B, H, Dh]
+        h = h + dense(lp["attn"]["wo"], a.reshape(B, 1, -1), cfg.dtype)
+        hn2 = apply_norm(cfg, lp["norm2"], h)
+        if "moe" in lp:
+            # routing must stay per-slot: expert capacity sees one token per
+            # request (matching the vmapped reference path), so a neighbor's
+            # token can never displace this slot's through a shared capacity
+            h = h + jax.vmap(lambda o: moe_mlp(cfg, lp["moe"], o[None])[0][0])(
+                hn2)
+        else:
+            h = h + mlp(cfg, lp["mlp"], hn2)
+        return (h, pk, pv), None
+
+    (x, pk, pv), _ = jax.lax.scan(
+        body, (x, pool_kv["k"], pool_kv["v"]),
+        (params["layers"], jnp.arange(cfg.n_layers)))
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params["embed"], x)
+    return logits[:, -1], {"k": pk, "v": pv}

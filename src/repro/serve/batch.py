@@ -156,6 +156,19 @@ def slice_token(cache, pos, *, batch_axes, cap_axes):
     return jax.tree.map(one, _strip_idx(dict(cache)), batch_axes, cap_axes)
 
 
+def tail_targets(tables, idx, live, block_size: int, trash):
+    """Per-slot tail-block write coordinates for the token at position
+    ``idx``: ``(blk [B], off [B])`` with dead slots routed to the trash block
+    (so runaway ``idx`` on a finished slot — which keeps incrementing inside
+    the fused chunk — can never clobber a live block). Shared by the
+    reference read path (:func:`repro.serve.steps.make_paged_decode`) and the
+    block-native kernel path, so both append with identical routing."""
+    B, max_blocks = tables.shape
+    page = jnp.clip(idx // block_size, 0, max_blocks - 1)
+    blk = jnp.where(live, tables[jnp.arange(B), page], trash)
+    return blk, idx % block_size
+
+
 def scatter_token(pool_data, writes, blk, off):
     """Write one token's values for every slot at ``(blk[i], off[i])``.
 
@@ -212,6 +225,16 @@ class BlockAllocator:
 
     def owned(self, slot: int) -> int:
         return int(self._count[slot])
+
+    def high_water(self) -> int:
+        """Largest per-slot block count currently allocated (≥ 1).
+
+        The serving loop clamps the device-side block tables to this many
+        columns before each decode chunk, so neither the reference gather nor
+        the kernel's grid walks pages no slot has reached yet — the
+        length-clamp that stops a mostly-short workload from paying for
+        ``capacity`` worth of empty pages per slot per token."""
+        return max(int(self._count.max()), 1)
 
     def ensure(self, slot: int, n_tokens: int) -> bool:
         """Grow ``slot``'s table until it covers ``n_tokens`` positions.
@@ -332,6 +355,11 @@ class BlockPool:
 
     def owned(self, slot: int) -> int:
         return self.alloc.owned(slot)
+
+    def high_water(self) -> int:
+        """Largest per-slot block count currently allocated (≥ 1); see
+        :meth:`BlockAllocator.high_water`."""
+        return self.alloc.high_water()
 
     def ensure(self, slot: int, n_tokens: int) -> bool:
         """Grow ``slot``'s table until it covers ``n_tokens`` positions.

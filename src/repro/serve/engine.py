@@ -51,9 +51,11 @@ from repro.serve.batch import (BlockPool, init_slot_cache, slot_axes,
                                write_prefill, write_slot)
 from repro.serve.scheduler import Request, SlotScheduler
 from repro.serve.steps import (make_decode_step, make_fused_decode,
-                               make_paged_decode, make_prefill_step)
+                               make_paged_decode, make_paged_kernel_decode,
+                               make_prefill_step)
 
 PAGED_FAMILIES = ("dense", "vlm", "moe")
+KV_IMPLS = ("auto", "kernel", "pallas", "reference")
 
 
 class ServeEngine:
@@ -61,7 +63,8 @@ class ServeEngine:
                  max_batch: int = 8, eos_id: int | None = None,
                  mode: str = "continuous", decode_chunk: int = 8,
                  prefill_bucket: bool = False, block_size: int = 16,
-                 num_blocks: int | None = None, recorder=None):
+                 num_blocks: int | None = None, kv_impl: str = "auto",
+                 recorder=None):
         if mode not in ("continuous", "cohort", "paged"):
             raise ValueError(
                 f"mode must be continuous|cohort|paged, got {mode!r}")
@@ -95,6 +98,7 @@ class ServeEngine:
         # donation is a no-op (and warns) on CPU
         donate = jax.default_backend() != "cpu"
         self.pool: BlockPool | None = None
+        self.kv_impl: str | None = None  # resolved policy (paged mode only)
         if mode == "continuous":
             axes = slot_axes(cfg, capacity, params=params)
             self._fused_decode = jax.jit(
@@ -115,11 +119,33 @@ class ServeEngine:
             self.pool = BlockPool(cfg, num_blocks=num_blocks,
                                   block_size=block_size, max_batch=max_batch,
                                   capacity=capacity, params=params)
+            # KV read-path policy. "reference": the PR-5 per-slot
+            # gather/scatter path (models.decode_step, bitwise the serial
+            # computation). "kernel": the block-native path — Pallas
+            # paged-attention compiled on TPU, its jnp-gather oracle
+            # elsewhere. "pallas": the kernel forced in interpret mode
+            # (CPU CI parity). "auto" resolves by backend: kernel on TPU,
+            # reference on CPU — preserving the bitwise serial-equivalence
+            # contract wherever the compiled kernel can't run.
+            if kv_impl not in KV_IMPLS:
+                raise ValueError(
+                    f"kv_impl must be one of {KV_IMPLS}, got {kv_impl!r}")
+            if kv_impl == "auto":
+                from repro.kernels import on_tpu
+                kv_impl = "kernel" if on_tpu() else "reference"
+            self.kv_impl = kv_impl
+            if kv_impl == "reference":
+                step_fn = make_paged_decode(
+                    cfg, self.pool.batch_axes, self.pool.cap_axes,
+                    block_size, decode_chunk, eos_id)
+            else:
+                # "pallas" forces the kernel; interpret=None lets the
+                # use_pallas policy pick compiled-on-TPU / interpret-on-CPU
+                step_fn = make_paged_kernel_decode(
+                    cfg, block_size, decode_chunk, eos_id,
+                    impl="pallas" if kv_impl == "pallas" else "auto")
             self._paged_decode = jax.jit(
-                make_paged_decode(cfg, self.pool.batch_axes,
-                                  self.pool.cap_axes, block_size,
-                                  decode_chunk, eos_id),
-                donate_argnums=(1, 2, 4, 5, 6) if donate else ())
+                step_fn, donate_argnums=(1, 2, 4, 5, 6) if donate else ())
             self._write_prefill = jax.jit(
                 partial(write_prefill, batch_axes=self.pool.batch_axes,
                         cap_axes=self.pool.cap_axes, block_size=block_size),
@@ -451,10 +477,17 @@ class ServeEngine:
             self._boundary_gauges(stats)
             if not live.any():
                 continue
+            # length-clamp: hand the device only the first `hw` table columns
+            # (every live slot's blocks sit below the allocator's high-water
+            # mark), so reference gathers / kernel grids stop at pages someone
+            # has actually reached. Bucketed to the next power of two so jit
+            # re-specializes O(log max_blocks) times, not once per width.
+            hw = min(1 << max(pool.high_water() - 1, 0).bit_length(),
+                     pool.max_blocks)
             with self.recorder.span("decode_chunk", steps=chunk):
                 out = self._paged_decode(
                     self.params, jnp.asarray(tok), pool.data,
-                    jnp.asarray(pool.tables), jnp.asarray(idx),
+                    jnp.asarray(pool.tables[:, :hw]), jnp.asarray(idx),
                     jnp.asarray(live), jnp.asarray(remaining))
             tok_d, pool.data, idx_d, live_d, remaining_d, tokens, emitted = out
             # in place: finish()/preempt() close over these same arrays

@@ -20,7 +20,9 @@ import jax.numpy as jnp
 
 from repro.models import decode_step, init_cache, prefill
 from repro.models.config import ModelConfig
-from repro.serve.batch import gather_pages, scatter_token, slice_token
+from repro.models.paged import paged_decode_step
+from repro.serve.batch import (gather_pages, scatter_token, slice_token,
+                               tail_targets)
 
 
 def make_prefill_step(cfg: ModelConfig, capacity: int):
@@ -140,10 +142,14 @@ def make_paged_decode(cfg: ModelConfig, batch_axes, cap_axes,
     remaining, tokens [chunk, B], emitted [chunk, B])`` — same
     emit/EOS/budget masking rule as :func:`make_fused_decode`, so
     ``SlotScheduler.record_decode`` consumes both grids identically.
+
+    ``max_blocks`` is read from ``tables.shape[1]``, NOT from the pool
+    capacity: the engine clamps the tables it passes in to the live
+    high-water block count (``BlockPool.high_water``), and ``jax.jit``
+    re-specializes per clamped width — so the gather below only ever
+    materializes pages some slot has actually reached.
     """
     def chunk(params, tok, pool_data, tables, idx, live, remaining):
-        B = tok.shape[0]
-        max_blocks = tables.shape[1]
         trash = jax.tree.leaves(pool_data)[0].shape[0] - 1
 
         def one(tok_i, table_i, idx_i, pool):
@@ -160,10 +166,8 @@ def make_paged_decode(cfg: ModelConfig, batch_axes, cap_axes,
             tok, pool_data, idx, live, remaining = carry
             next_tok, writes = jax.vmap(one, in_axes=(0, 0, 0, None))(
                 tok, tables, idx, pool_data)
-            page = jnp.clip(idx // block_size, 0, max_blocks - 1)
-            blk = jnp.where(live, tables[jnp.arange(B), page], trash)
-            pool_data = scatter_token(pool_data, writes, blk,
-                                      idx % block_size)
+            blk, off = tail_targets(tables, idx, live, block_size, trash)
+            pool_data = scatter_token(pool_data, writes, blk, off)
             emit = live
             remaining = jnp.where(emit, remaining - 1, remaining)
             if eos_id is None:
@@ -179,6 +183,75 @@ def make_paged_decode(cfg: ModelConfig, batch_axes, cap_axes,
             length=decode_chunk)
         tok, pool_data, idx, live, remaining = carry
         return tok, pool_data, idx, live, remaining, tokens, emitted
+
+    return chunk
+
+
+def make_paged_kernel_decode(cfg: ModelConfig, block_size: int,
+                             decode_chunk: int, eos_id: int | None, *,
+                             impl: str = "auto",
+                             interpret: bool | None = None):
+    """Scan-fused paged decode over the BLOCK-NATIVE read path: same outer
+    signature and emit/EOS/budget semantics as :func:`make_paged_decode`, but
+    each step runs :func:`repro.models.paged.paged_decode_step` — attention
+    walks the block table directly (``repro.kernels.ops.paged_attention``)
+    and K/V are appended to the tail block inside the layer scan, so the
+    per-slot ``gather_pages`` → dense attention → ``scatter_token`` round
+    trip of the reference path disappears entirely.
+
+    ``impl`` selects the attention implementation:
+
+    * ``"auto"`` — ``ops.paged_attention`` policy dispatch (compiled Pallas
+      on TPU, jnp-gather oracle elsewhere);
+    * ``"pallas"`` — force the Pallas kernel (``interpret`` defaulting per
+      the ``use_pallas`` policy; pass ``interpret=True`` for CPU CI parity).
+
+    Only valid for the attention-KV families (``PAGED_FAMILIES``), whose
+    pool tree is exactly ``{"kv": {"k", "v"}}``. Token streams are
+    bitwise-or-tolerance equal to the reference path: argmax token ids match
+    in every mode including under forced preemption (tests/test_paged_kernel
+    .py); logits agree to kernel tolerance, not bitwise, because the online
+    softmax reassociates the reduction.
+    """
+    from repro.kernels import ops
+
+    if impl not in ("auto", "pallas"):
+        raise ValueError(f"impl must be auto|pallas, got {impl!r}")
+
+    def attend(q, k_pages, v_pages, tables, lengths, layer):
+        if impl == "pallas":
+            return ops.paged_attention(q, k_pages, v_pages, tables, lengths,
+                                       layer, force_pallas=True,
+                                       interpret=interpret)
+        return ops.paged_attention(q, k_pages, v_pages, tables, lengths,
+                                   layer)
+
+    def chunk(params, tok, pool_data, tables, idx, live, remaining):
+        trash = pool_data["kv"]["k"].shape[0] - 1
+
+        def body(carry, _):
+            tok, pool_kv, idx, live, remaining = carry
+            blk, off = tail_targets(tables, idx, live, block_size, trash)
+            lengths = jnp.where(live, idx + 1, 0).astype(jnp.int32)
+            logits, pool_kv = paged_decode_step(
+                cfg, params, tok, pool_kv, tables, blk, off, idx, lengths,
+                attend=attend)
+            next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+            emit = live
+            remaining = jnp.where(emit, remaining - 1, remaining)
+            if eos_id is None:
+                hit_eos = jnp.zeros_like(live)
+            else:
+                hit_eos = emit & (next_tok == eos_id)
+            live = live & ~hit_eos & (remaining > 0)
+            tok = jnp.where(emit, next_tok, tok)
+            return (tok, pool_kv, idx + 1, live, remaining), (next_tok, emit)
+
+        carry, (tokens, emitted) = jax.lax.scan(
+            body, (tok, pool_data["kv"], idx, live, remaining), None,
+            length=decode_chunk)
+        tok, pool_kv, idx, live, remaining = carry
+        return tok, {"kv": pool_kv}, idx, live, remaining, tokens, emitted
 
     return chunk
 

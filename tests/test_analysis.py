@@ -18,6 +18,7 @@ import pytest
 from repro.analysis.ast_rules import lint_source
 from repro.analysis.catalogue import RULES, explain
 from repro.analysis.contracts import (check_blockpool_spec,
+                                      check_kernel_oracles,
                                       check_mix_protocol, check_topologies)
 from repro.analysis.findings import (Finding, apply_suppressions,
                                      diff_baseline, load_baseline,
@@ -453,6 +454,73 @@ def test_blockpool_spec_failed_ensure_mutation_flagged():
         lambda: Greedy(num_blocks=2, block_size=2, max_batch=2, capacity=8),
         depth=2)
     assert "BLOCKPOOL_SPEC" in rules_of(found)
+
+
+_KERNEL_SRC = {"src/repro/kernels/myk.py": textwrap.dedent("""\
+    import jax.experimental.pallas as pl
+
+    def _myk_body(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    def my_kernel(x, *, interpret=False):
+        return pl.pallas_call(_myk_body, interpret=interpret)(x)
+    """)}
+_KERNEL_REG = {"my_kernel": ("my_kernel_ref", "tests/test_kernels.py")}
+_KERNEL_TESTS = {"tests/test_kernels.py":
+                 "out = my_kernel(x); ref = my_kernel_ref(x)"}
+
+
+def test_kernel_oracles_real_registry_clean():
+    """Every pallas_call site in src/repro/kernels/ is registered with a
+    live oracle and a parity test that names both."""
+    assert check_kernel_oracles() == []
+
+
+def test_kernel_oracles_registered_fixture_clean():
+    assert check_kernel_oracles(
+        sources=_KERNEL_SRC, registry=_KERNEL_REG,
+        oracle_names={"my_kernel_ref"}, test_sources=_KERNEL_TESTS) == []
+
+
+def test_kernel_oracle_unregistered_kernel_flagged():
+    """Acceptance scenario: a new pallas_call staging function with no
+    KERNEL_ORACLES entry is caught, at the pallas_call line."""
+    found = check_kernel_oracles(
+        sources=_KERNEL_SRC, registry={}, oracle_names=set(),
+        test_sources={})
+    assert rules_of(found) == {"KERNEL_ORACLE"}
+    (f,) = found
+    assert f.path == "src/repro/kernels/myk.py" and f.line == 7
+    assert "my_kernel" in f.message and "no KERNEL_ORACLES entry" in f.message
+
+
+def test_kernel_oracle_stale_entry_and_missing_oracle_flagged():
+    # registry names a kernel that no longer stages pallas_call
+    found = check_kernel_oracles(
+        sources={}, registry=_KERNEL_REG, oracle_names={"my_kernel_ref"},
+        test_sources=_KERNEL_TESTS)
+    assert any("stale registration" in f.message for f in found)
+    # oracle name absent from kernels.ref
+    found = check_kernel_oracles(
+        sources=_KERNEL_SRC, registry=_KERNEL_REG, oracle_names=set(),
+        test_sources=_KERNEL_TESTS)
+    assert any(f.path == "src/repro/kernels/ref.py"
+               and "does not define" in f.message for f in found)
+
+
+def test_kernel_oracle_test_file_gaps_flagged():
+    # test file missing entirely
+    found = check_kernel_oracles(
+        sources=_KERNEL_SRC, registry=_KERNEL_REG,
+        oracle_names={"my_kernel_ref"}, test_sources={})
+    assert any("does not exist" in f.message for f in found)
+    # test file exists but never compares kernel against oracle
+    found = check_kernel_oracles(
+        sources=_KERNEL_SRC, registry=_KERNEL_REG,
+        oracle_names={"my_kernel_ref"},
+        test_sources={"tests/test_kernels.py": "def test_unrelated(): pass"})
+    assert any("never" in f.message and "my_kernel" in f.message
+               for f in found)
 
 
 def test_trace_fail_on_broken_entry():

@@ -1,0 +1,183 @@
+"""Block-native paged decode (`kv_impl="kernel"` / `"pallas"`) vs the jnp
+reference serving path and the serial one-request oracle.
+
+The kernel path changes the attention *implementation* (online softmax over
+block-table pages, fused tail append) but not the computation's semantics:
+the contract is bitwise-or-tolerance — per-request greedy token streams must
+be identical to the reference path (and hence to serial decode) in every
+mode, including under forced preemption; logits agree to kernel tolerance
+rather than bitwise because the blocked softmax reassociates reductions.
+
+`kv_impl="kernel"` on CPU runs the block-native step with the jnp-gather
+attention oracle (exercising the fused append + batched layer scan);
+`kv_impl="pallas"` forces the actual Pallas kernel in interpret mode — the
+CPU CI stand-in for the compiled TPU path.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.models import decode_step, init_params, prefill
+from repro.serve import ServeEngine
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get("smollm-360m").reduced().with_overrides(
+        d_model=32, n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64, vocab=64)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _serial_greedy(cfg, params, prompt, max_new, eos_id=None, capacity=32):
+    """Reference: one-request-at-a-time prefill + decode_step loop."""
+    lg, cache = prefill(cfg, params,
+                        jnp.asarray(np.asarray(prompt, np.int32)[None]),
+                        capacity)
+    tok = int(jnp.argmax(lg[0, -1]))
+    out = [tok]
+    while len(out) < max_new and (eos_id is None or tok != eos_id):
+        lg, cache = decode_step(cfg, params,
+                                jnp.asarray([[tok]], jnp.int32), cache)
+        tok = int(jnp.argmax(lg[0, -1]))
+        out.append(tok)
+    return out
+
+
+def _drain(cfg, params, reqs, kv_impl, **kw):
+    kw.setdefault("capacity", 32)
+    kw.setdefault("max_batch", 3)
+    kw.setdefault("decode_chunk", 3)
+    kw.setdefault("block_size", 4)
+    eng = ServeEngine(cfg, params, mode="paged", kv_impl=kv_impl, **kw)
+    rids = [eng.submit(p, max_new_tokens=b) for p, b in reqs]
+    results = eng.run()
+    return eng, [results[r] for r in rids]
+
+
+def test_kv_impl_validation_and_auto(model):
+    cfg, params = model
+    with pytest.raises(ValueError, match="kv_impl"):
+        ServeEngine(cfg, params, mode="paged", capacity=32, max_batch=2,
+                    kv_impl="gpu")
+    eng = ServeEngine(cfg, params, mode="paged", capacity=32, max_batch=2,
+                      kv_impl="auto")
+    # auto resolves by backend: the compiled kernel only on TPU, the bitwise
+    # reference path everywhere else (this suite runs on CPU)
+    expect = "kernel" if jax.default_backend() == "tpu" else "reference"
+    assert eng.kv_impl == expect
+    assert ServeEngine(cfg, params, capacity=32, max_batch=2).kv_impl is None
+
+
+def test_kernel_streams_match_serial(model):
+    """Mid-decode admission workload: the block-native path reproduces the
+    serial greedy streams token for token."""
+    cfg, params = model
+    rng = np.random.default_rng(0)
+    reqs = [(rng.integers(0, cfg.vocab, size=int(rng.integers(3, 10))),
+             int(b)) for b in (4, 7, 1, 5)]
+    eng, streams = _drain(cfg, params, reqs, "kernel", max_batch=2)
+    for (prompt, budget), got in zip(reqs, streams):
+        assert got == _serial_greedy(cfg, params, prompt, budget)
+    assert eng.pool.free_blocks == eng.pool.num_blocks
+
+
+def test_pallas_interpret_streams_match_serial(model):
+    """The forced Pallas kernel (interpret mode on CPU — the CI stand-in for
+    the compiled TPU path) keeps the same streams."""
+    cfg, params = model
+    rng = np.random.default_rng(3)
+    reqs = [(rng.integers(0, cfg.vocab, size=int(rng.integers(3, 8))),
+             int(b)) for b in (4, 6, 3)]
+    eng, streams = _drain(cfg, params, reqs, "pallas", capacity=16,
+                          num_blocks=16)
+    assert eng.kv_impl == "pallas"
+    for (prompt, budget), got in zip(reqs, streams):
+        assert got == _serial_greedy(cfg, params, prompt, budget, capacity=16)
+    assert eng.pool.free_blocks == eng.pool.num_blocks
+
+
+def test_kernel_preemption_preserves_streams(model):
+    """Forced preemption (pool deliberately too small): evicted requests
+    restart on the kernel path and still reproduce the serial streams, and
+    the pool drains clean."""
+    cfg, params = model
+    rng = np.random.default_rng(1)
+    reqs = [(rng.integers(0, cfg.vocab, size=int(rng.integers(4, 12))),
+             int(b)) for b in (9, 8, 10, 7, 9)]
+    eng, streams = _drain(cfg, params, reqs, "kernel", max_batch=4,
+                          decode_chunk=4, num_blocks=7)
+    assert eng.stats["preemptions"] > 0, "workload must exercise preemption"
+    for (prompt, budget), got in zip(reqs, streams):
+        assert got == _serial_greedy(cfg, params, prompt, budget)
+    assert eng.pool.free_blocks == eng.pool.num_blocks
+
+
+def test_kernel_eos_matches_serial(model):
+    """In-scan EOS masking stops a kernel-path stream exactly where serial
+    decode stops it."""
+    cfg, params = model
+    prompt = [5, 9, 2, 7]
+    ref = _serial_greedy(cfg, params, prompt, 8)
+    k = next(i for i in range(1, len(ref)) if ref[i] not in ref[:i])
+    eng, streams = _drain(cfg, params, [(prompt, 8), ([1, 2, 3], 6)],
+                          "kernel", max_batch=2, decode_chunk=4,
+                          eos_id=ref[k])
+    assert streams[0] == ref[:k + 1] and streams[0][-1] == ref[k]
+    assert len(streams[1]) <= 6
+    assert eng.pool.free_blocks == eng.pool.num_blocks
+
+
+def test_kernel_moe_per_slot_routing(model):
+    """MoE family: the batched kernel step must keep routing per-slot (each
+    request's token sees its own expert capacity), so streams still match
+    the per-slot-vmapped reference path."""
+    cfg = get("phi3.5-moe-42b-a6.6b").reduced().with_overrides(
+        d_model=32, n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64, vocab=64)
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    rng = np.random.default_rng(5)
+    reqs = [(rng.integers(0, cfg.vocab, size=int(rng.integers(3, 9))),
+             int(b)) for b in (4, 6, 3)]
+    _, ref_streams = _drain(cfg, params, reqs, "reference", max_batch=2)
+    _, ker_streams = _drain(cfg, params, reqs, "kernel", max_batch=2)
+    assert ker_streams == ref_streams
+
+
+def test_kernel_logits_within_tolerance(model):
+    """One decode step, kernel path vs reference path, same pool state: the
+    last-layer logits agree to attention-kernel tolerance (the 'or-tolerance'
+    half of the contract — reduction order differs, bits may not)."""
+    from repro.models.paged import paged_decode_step
+    from repro.kernels import ops, paged_attention_ref
+    from repro.serve.batch import tail_targets
+
+    cfg, params = model
+    rng = np.random.default_rng(7)
+    B, bs, n_pages = 3, 4, 4
+    L, Hkv, Dh = cfg.n_layers, cfg.n_kv_heads, cfg.head_dim
+    num_blocks = B * n_pages
+    pool_kv = {
+        "k": jnp.asarray(rng.normal(size=(num_blocks + 1, bs, L, Hkv, Dh)),
+                         jnp.float32),
+        "v": jnp.asarray(rng.normal(size=(num_blocks + 1, bs, L, Hkv, Dh)),
+                         jnp.float32)}
+    tables = jnp.asarray(rng.permutation(num_blocks).reshape(B, n_pages)
+                         .astype(np.int32))
+    idx = jnp.asarray([3, 7, 11], jnp.int32)
+    live = jnp.ones((B,), bool)
+    tok = jnp.asarray(rng.integers(0, cfg.vocab, size=B), jnp.int32)
+    blk, off = tail_targets(tables, idx, live, bs, num_blocks)
+    lengths = (idx + 1).astype(jnp.int32)
+
+    def run(attend):
+        return paged_decode_step(cfg, params, tok, pool_kv, tables, blk, off,
+                                 idx, lengths, attend=attend)
+
+    ref_logits, _ = run(paged_attention_ref)
+    ker_logits, _ = run(
+        lambda *a: ops.paged_attention(*a, force_pallas=True, interpret=True))
+    assert float(jnp.max(jnp.abs(ref_logits - ker_logits))) < 2e-4
+    assert jnp.argmax(ref_logits, -1).tolist() == \
+        jnp.argmax(ker_logits, -1).tolist()
