@@ -9,11 +9,14 @@
   satisfying Assumption 1 (symmetric, doubly stochastic, spectral gap > 0)
   at a probe size.
 * **BLOCKPOOL_SPEC** — the :class:`~repro.serve.batch.BlockAllocator`
-  invariants (conservation, table/owner agreement, trash padding,
-  exclusivity, failed-ensure-changes-nothing) hold after *every* op of
-  *every* ensure/release sequence up to a fixed depth on a tiny allocator —
-  exhaustive, so a regression that leaks only on a rare interleaving still
-  fails deterministically.
+  invariants (conservation over distinct blocks, refcount == table
+  occurrence count, free list == exactly the refcount-0 blocks, trash
+  padding, failed-ensure/fork-changes-nothing, no write to a shared block
+  without a copy-on-write fork) hold after *every* op of *every*
+  ensure/attach/write/release sequence up to a fixed depth on a tiny
+  allocator — exhaustive, so a regression that leaks only on a rare
+  interleaving (a refcount leaked by attach, a shared block freed
+  prematurely) still fails deterministically.
 * **KERNEL_ORACLE** — every module-level function in
   ``src/repro/kernels/`` that stages a ``pl.pallas_call`` is registered in
   :data:`repro.kernels.KERNEL_ORACLES` with a pure-jnp reference that
@@ -33,7 +36,6 @@ implementations and assert the rule fires.
 from __future__ import annotations
 
 import ast
-import copy
 import inspect
 import itertools
 import pathlib
@@ -152,42 +154,106 @@ def check_topologies(builders: dict[str, Callable] | None = None,
 # BlockAllocator spec (exhaustive op-sequence enumeration)
 # ---------------------------------------------------------------------------
 
-def _allocator_invariants(a, label: str) -> str | None:
-    """None when all invariants hold, else a description of the violation."""
-    owned_total = sum(a.owned(s) for s in range(a.max_batch))
-    if a.free_blocks + owned_total != a.num_blocks:
-        return (f"{label}: conservation broken — free({a.free_blocks}) + "
-                f"owned({owned_total}) != num_blocks({a.num_blocks})")
-    seen: dict[int, int] = {}
+def allocator_invariants(a, label: str = "state") -> str | None:
+    """None when all refcounted-allocator invariants hold, else a
+    description of the violation. Public so the copy-on-write property
+    suite (tests/test_cow_properties.py) can assert it after every event
+    of a live serving trace, not just in the exhaustive enumeration."""
+    occ = [0] * a.num_blocks
     for s in range(a.max_batch):
         cnt = a.owned(s)
-        live = [int(b) for b in a.tables[s, :cnt]]
-        for b in live:
+        for b in a.tables[s, :cnt]:
+            b = int(b)
             if not 0 <= b < a.num_blocks:
                 return f"{label}: slot {s} table holds invalid block {b}"
-            if a._owner[b] != s:
-                return (f"{label}: agreement broken — tables[{s}] holds "
-                        f"block {b} but owner map says {a._owner[b]}")
-            if b in seen:
-                return (f"{label}: exclusivity broken — block {b} in both "
-                        f"slot {seen[b]} and slot {s} tables")
-            seen[b] = s
+            occ[b] += 1
         tail = [int(b) for b in a.tables[s, cnt:]]
         if any(b != a.trash for b in tail):
             return (f"{label}: trash padding broken — tables[{s}, {cnt}:] "
                     f"= {tail}, expected all {a.trash}")
-    for b in a._free:
-        if a._owner[b] != -1:
-            return (f"{label}: free list holds block {b} with owner "
-                    f"{a._owner[b]}")
-    if len(set(a._free)) != len(a._free):
+    for b in range(a.num_blocks):
+        if a.refcount(b) != occ[b]:
+            return (f"{label}: ref-agreement broken — block {b} has "
+                    f"refcount {a.refcount(b)} but {occ[b]} table "
+                    "occurrence(s)")
+    free = [int(b) for b in a._free]
+    if len(set(free)) != len(free):
         return f"{label}: free list has duplicates"
+    zero = {b for b in range(a.num_blocks) if a.refcount(b) == 0}
+    if set(free) != zero:
+        leaked = sorted(zero - set(free))
+        premature = sorted(set(free) - zero)
+        if leaked:
+            return (f"{label}: conservation broken — refcount-0 block(s) "
+                    f"{leaked} never returned to the free list")
+        return (f"{label}: premature free — block(s) {premature} on the "
+                "free list while still referenced")
+    in_use = sum(1 for b in range(a.num_blocks) if a.refcount(b) > 0)
+    if a.free_blocks + in_use != a.num_blocks:
+        return (f"{label}: conservation broken — free({a.free_blocks}) + "
+                f"in_use({in_use}) != num_blocks({a.num_blocks})")
     return None
 
 
+# backwards-compatible alias (pre-refcount name)
+_allocator_invariants = allocator_invariants
+
+
 def _alloc_state(a):
-    return (tuple(a._free), tuple(a._owner.tolist()),
-            tuple(a._count.tolist()), a.tables.tobytes())
+    return (tuple(a._free), tuple(a._refs.tolist()),
+            tuple(a._gens.tolist()), tuple(a._count.tolist()),
+            a.tables.tobytes())
+
+
+def _spec_op(a, op) -> str | None:
+    """Apply one model op to allocator ``a``; returns a violation message or
+    None. Ops mirror the serving flow: ``ensure`` grows a slot, ``attach``
+    aliases another slot's live run (shared prefix), ``attach_free`` revives
+    the oldest freed-but-cached block, ``write`` models the fused tail
+    append — it copy-on-write forks the slot's last page first and flags a
+    still-shared write target as the violation no stream contract would
+    survive."""
+    kind = op[0]
+    if kind == "ensure":
+        before = _alloc_state(a)
+        if not a.ensure(op[1], op[2]) and _alloc_state(a) != before:
+            return "failed ensure mutated state"
+    elif kind == "release":
+        a.release(op[1])
+        if a.owned(op[1]) != 0:
+            return "release left owned() != 0"
+    elif kind == "attach":
+        dst, src = op[1], op[2]
+        run = [int(b) for b in a.tables[src, :a.owned(src)]]
+        # model only the legal admission shape: an empty slot aliasing a
+        # resident run that fits its table
+        if a.owned(dst) == 0 and run and len(run) <= a.max_blocks:
+            a.attach(dst, run)
+    elif kind == "attach_free":
+        if a.owned(op[1]) == 0 and a.free_blocks:
+            a.attach(op[1], [a._free[0]])   # revive a freed-but-cached block
+    elif kind == "write":
+        s = op[1]
+        if not a.owned(s):
+            return None
+        page = a.owned(s) - 1
+        if a.needs_fork(s, page) and not a.free_blocks:
+            # a fork with no room must refuse AND change nothing — the
+            # engine preempts to make room before writing
+            before = _alloc_state(a)
+            try:
+                a.fork_for_write(s, page)
+                return "fork with empty free list did not refuse"
+            except RuntimeError:
+                if _alloc_state(a) != before:
+                    return "refused fork mutated state"
+            return None
+        a.fork_for_write(s, page)
+        blk = int(a.tables[s, page])
+        if a.refcount(blk) > 1:
+            return (f"write to shared block {blk} without fork "
+                    f"(refcount {a.refcount(blk)})")
+    return None
 
 
 def check_blockpool_spec(factory: Callable[[], object] | None = None,
@@ -206,32 +272,28 @@ def check_blockpool_spec(factory: Callable[[], object] | None = None,
     tokens = sorted({1, probe.block_size + 1,
                      probe.max_blocks * probe.block_size * 2})
     ops = ([("ensure", s, n) for s in slots for n in tokens]
-           + [("release", s) for s in slots])
+           + [("release", s) for s in slots]
+           + [("attach", d, s) for d in slots for s in slots if d != s]
+           + [("attach_free", s) for s in slots]
+           + [("write", s) for s in slots])
 
     out: list[Finding] = []
 
     def run(seq) -> None:
         a = factory()
-        err = _allocator_invariants(a, "init")
+        err = allocator_invariants(a, "init")
         if err is None:
             for i, op in enumerate(seq):
                 label = "; ".join(f"{o[0]}{o[1:]}" for o in seq[:i + 1])
                 try:
-                    if op[0] == "ensure":
-                        before = (copy.deepcopy(a), _alloc_state(a))
-                        ok = a.ensure(op[1], op[2])
-                        if not ok and _alloc_state(a) != before[1]:
-                            err = (f"{label}: failed ensure mutated state")
-                            break
-                    else:
-                        a.release(op[1])
-                        if a.owned(op[1]) != 0:
-                            err = f"{label}: release left owned() != 0"
-                            break
+                    err = _spec_op(a, op)
+                    if err is not None:
+                        err = f"{label}: {err}"
+                        break
                 except Exception as e:
                     err = f"{label}: raised {type(e).__name__}: {e}"
                     break
-                err = _allocator_invariants(a, label)
+                err = allocator_invariants(a, label)
                 if err is not None:
                     break
         if err is not None:

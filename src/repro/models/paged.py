@@ -18,6 +18,12 @@ Only the full-attention KV families qualify (``dense``/``vlm``/``moe`` — the
 same ``PAGED_FAMILIES`` gate the engine enforces); their pool holds exactly
 two leaves ``{"kv": {"k", "v"}}`` of layout
 ``[num_blocks + 1, block_size, L, Hkv, Dh]``.
+
+Tables may alias physical pages across slots (shared-prefix copy-on-write):
+reads are alias-oblivious, but the tail append scatters into
+``tables[i, blk]`` in place, so the caller must hand this step tables whose
+write pages are exclusively owned — the engine forks shared tail blocks
+(``BlockPool.fork_for_write`` + ``copy_block``) before every chunk.
 """
 from __future__ import annotations
 

@@ -24,11 +24,21 @@ state, cross-attention caches) cannot be paged — :class:`BlockPool` rejects
 those families up front.
 
 The device-side ops (:func:`write_prefill`, :func:`gather_pages`,
-:func:`slice_token`, :func:`scatter_token`) are pure JAX; the block
-*allocator* inside :class:`BlockPool` is host-side numpy (free list, owner
-map, per-slot tables) and is never traced.
+:func:`slice_token`, :func:`scatter_token`, :func:`copy_block`) are pure
+JAX; the block *allocator* inside :class:`BlockPool` is host-side numpy
+(free list, refcounts, per-slot tables) and is never traced.
+
+Blocks are **refcounted** so requests sharing a prompt prefix can alias the
+same physical block from several slots' tables (shared-prefix copy-on-write:
+:class:`PrefixIndex` finds resident block runs by content hash,
+:meth:`BlockAllocator.attach` bumps their refcounts, and
+:meth:`BlockAllocator.fork_for_write` forks a shared tail block into a
+fresh exclusive one before any slot appends to it).
 """
 from __future__ import annotations
+
+import hashlib
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -179,22 +189,54 @@ def scatter_token(pool_data, writes, blk, off):
         lambda p, w: p.at[blk, off].set(w.astype(p.dtype)), pool_data, writes)
 
 
+def copy_block(pool_data, src, dst):
+    """Copy-on-write fork, device side: duplicate physical block ``src``
+    into ``dst`` on every pooled leaf (one ``[block_size, *rest]`` page per
+    cache tensor). The engine calls this immediately after
+    :meth:`BlockAllocator.fork_for_write` repoints a slot's table at the
+    fresh block, so the forking slot sees bit-identical content and the
+    remaining holders keep reading the untouched original — the fork is
+    invisible to attention outputs."""
+    return jax.tree.map(lambda p: p.at[dst].set(p[src]), pool_data)
+
+
 class BlockAllocator:
-    """Pure host-side paged-KV block allocator: free list + owner map +
+    """Pure host-side paged-KV block allocator: free list + refcounts +
     per-slot block tables. No device state — exactly the part of
     :class:`BlockPool` that ``repro.analysis.contracts`` model-checks by
-    enumerating every ensure/release sequence on a tiny instance.
+    enumerating every ensure/attach/write/release sequence on a tiny
+    instance.
+
+    Blocks are refcounted so shared-prefix requests can alias one physical
+    block from several slots' tables:
+
+    * :meth:`ensure` allocates fresh exclusive blocks (refcount 1);
+    * :meth:`attach` appends already-indexed blocks to a slot's table,
+      bumping refcounts — a block whose refcount already dropped to 0 is
+      *revived* off the free list with content and generation intact;
+    * a block with refcount > 1 is read-only: :meth:`fork_for_write` pops a
+      fresh block for the writing slot and drops the shared one's refcount
+      (the caller mirrors the fork on device with :func:`copy_block`);
+    * :meth:`release` decrements once per table occurrence and appends a
+      block to the free-list *tail* only at refcount 0 — FIFO reuse keeps
+      freed blocks revivable for as long as possible, and the per-block
+      allocation ``generation`` (bumped whenever a block is popped off the
+      free list) lets :class:`PrefixIndex` invalidate stale entries lazily,
+      with no callbacks.
 
     Invariants after every public op (the checkable spec):
 
-    1. conservation — ``free_blocks + sum(owned) == num_blocks``;
-    2. agreement — ``tables[slot, :owned(slot)]`` are exactly the blocks
-       whose owner is ``slot``;
+    1. conservation — ``free_blocks + #{blocks with refcount > 0}
+       == num_blocks``;
+    2. ref-agreement — every block's refcount equals its number of
+       occurrences across all live table prefixes
+       ``tables[slot, :owned(slot)]``;
     3. trash padding — ``tables[slot, owned(slot):]`` all point at the
        trash block;
-    4. exclusivity — no block appears in two slots' live table prefixes or
-       in both a live prefix and the free list;
-    5. a failed ``ensure`` (returning False) changes nothing.
+    4. free-list exactness — the free list holds exactly the refcount-0
+       blocks, each once;
+    5. a failed ``ensure`` / ``fork_for_write`` (refused for lack of free
+       blocks, allocating nothing) changes nothing.
     """
 
     def __init__(self, *, num_blocks: int, block_size: int, max_batch: int,
@@ -208,8 +250,12 @@ class BlockAllocator:
         self.trash = num_blocks
         self.tables = np.full((max_batch, self.max_blocks), self.trash,
                               np.int32)
-        self._free: list[int] = list(range(num_blocks - 1, -1, -1))
-        self._owner = np.full(num_blocks, -1, np.int64)
+        # FIFO: allocate from the front, free to the back — a freed block
+        # stays revivable (content intact) until every earlier-freed block
+        # has been reused first
+        self._free: list[int] = list(range(num_blocks))
+        self._refs = np.zeros(num_blocks, np.int64)
+        self._gens = np.zeros(num_blocks, np.int64)
         self._count = np.zeros(max_batch, np.int64)
 
     @property
@@ -225,6 +271,18 @@ class BlockAllocator:
 
     def owned(self, slot: int) -> int:
         return int(self._count[slot])
+
+    def refcount(self, blk: int) -> int:
+        """How many live table occurrences reference physical block ``blk``
+        (0 = free/cached). A block with refcount > 1 is read-only."""
+        return int(self._refs[blk])
+
+    def generation(self, blk: int) -> int:
+        """Allocation generation of ``blk`` — bumped every time the block is
+        popped off the free list (its content is about to be overwritten).
+        :class:`PrefixIndex` entries record the generation they were indexed
+        at; a mismatch means the cached content is gone."""
+        return int(self._gens[blk])
 
     def high_water(self) -> int:
         """Largest per-slot block count currently allocated (≥ 1).
@@ -248,27 +306,188 @@ class BlockAllocator:
         if need > self.free_blocks:
             return False
         for _ in range(need):
-            blk = self._free.pop()
-            if self._owner[blk] != -1:
-                raise AssertionError(
-                    f"block {blk} double-allocated (owner {self._owner[blk]})")
-            self._owner[blk] = slot
-            self.tables[slot, self._count[slot]] = blk
-            self._count[slot] += 1
+            self._append(slot, self._pop_fresh())
         return True
 
+    def _pop_fresh(self) -> int:
+        """Pop the oldest free block for (re)use: refcount 0 -> 1, generation
+        bumped so any :class:`PrefixIndex` entry for its old content dies."""
+        blk = self._free.pop(0)
+        if self._refs[blk] != 0:
+            raise AssertionError(
+                f"block {blk} double-allocated (refcount {self._refs[blk]})")
+        self._refs[blk] = 1
+        self._gens[blk] += 1
+        return blk
+
+    def _append(self, slot: int, blk: int) -> None:
+        self.tables[slot, self._count[slot]] = blk
+        self._count[slot] += 1
+
+    def attach(self, slot: int, blocks) -> None:
+        """Append already-indexed physical ``blocks`` to ``slot``'s table,
+        bumping each refcount — the shared-prefix admission path: the blocks
+        were written once by an earlier request's prefill and this slot now
+        aliases them read-only. Blocks whose refcount already dropped to 0
+        are revived off the free list (content + generation intact; the
+        caller validated freshness through :class:`PrefixIndex`)."""
+        blocks = [int(b) for b in blocks]
+        if self.owned(slot) + len(blocks) > self.max_blocks:
+            raise AssertionError(
+                f"slot {slot} table overflow: {self.owned(slot)} + "
+                f"{len(blocks)} > {self.max_blocks}")
+        for blk in blocks:
+            if not 0 <= blk < self.num_blocks:
+                raise AssertionError(f"attach of invalid block {blk}")
+            if self._refs[blk] == 0:
+                self._free.remove(blk)   # revive: content kept, gen unchanged
+            self._refs[blk] += 1
+            self._append(slot, blk)
+
+    def needs_fork(self, slot: int, page: int) -> bool:
+        """Would a write through ``tables[slot, page]`` hit a shared block?
+        Shared blocks are read-only: the engine checks this for every live
+        slot's tail page before a decode chunk and forks first."""
+        if not 0 <= page < self.owned(slot):
+            return False   # unallocated page: ensure() will pop a fresh one
+        return self.refcount(int(self.tables[slot, page])) > 1
+
+    def fork_for_write(self, slot: int, page: int) -> tuple[int, int] | None:
+        """Copy-on-write fork: make ``tables[slot, page]`` exclusive before
+        the fused tail append writes through it.
+
+        Returns ``(old, new)`` when a fork happened — the caller must mirror
+        it on device with :func:`copy_block` — or None when the page is
+        already exclusive (or unallocated). Raises when a fork is needed but
+        the free list is empty; the engine preempts to make room before
+        calling (see :meth:`needs_fork`)."""
+        if not self.needs_fork(slot, page):
+            return None
+        if not self._free:
+            raise RuntimeError(
+                f"fork of slot {slot} page {page} needs a free block")
+        old = int(self.tables[slot, page])
+        new = self._pop_fresh()
+        self._refs[old] -= 1
+        self.tables[slot, page] = new
+        return old, new
+
     def release(self, slot: int) -> None:
-        """Free every block the slot owns and reset its table to trash."""
+        """Drop one reference per block the slot's table holds and reset the
+        table to trash; blocks reaching refcount 0 rejoin the free-list tail
+        (still revivable through :meth:`attach` until reallocated)."""
         for j in range(self.owned(slot)):
             blk = int(self.tables[slot, j])
-            if self._owner[blk] != slot:
+            if self._refs[blk] < 1:
                 raise AssertionError(
-                    f"slot {slot} freeing block {blk} owned by "
-                    f"{self._owner[blk]}")
-            self._owner[blk] = -1
-            self._free.append(blk)
+                    f"slot {slot} freeing block {blk} with refcount "
+                    f"{self._refs[blk]}")
+            self._refs[blk] -= 1
+            if self._refs[blk] == 0:
+                self._free.append(blk)
         self.tables[slot, :] = self.trash
         self._count[slot] = 0
+
+
+class PrefixMatch(NamedTuple):
+    """Result of a :meth:`PrefixIndex.match`: the longest resident run of
+    physical blocks whose cached K/V covers a prompt prefix."""
+    blocks: tuple[int, ...]   # physical blocks, logical page order
+    n_tokens: int             # prompt tokens the run covers
+    exact: bool               # whole prompt matched (incl. a partial tail)
+    first_tok: int | None     # cached greedy first token (exact hits only)
+
+
+class PrefixIndex:
+    """Content-hash index from prompt prefixes to resident physical blocks.
+
+    Two entry kinds, both recorded when a request's prefill lands:
+
+    * **chain** — hash of the first ``k * block_size`` prompt tokens -> the
+      physical block holding page ``k - 1``, for every full block the prompt
+      fills. A lookup walks k = 1, 2, ... and stops at the first miss, so
+      any two prompts sharing a prefix share its full blocks.
+    * **exact** — hash of the whole prompt -> all its pages (including a
+      partial tail block) plus the prefill's greedy first token. An exact
+      resubmission (same system prompt + same user query, or a preempted
+      request restarting) skips prefill compute entirely: it attaches the
+      cached blocks and starts decoding from the cached first token.
+
+    Entries are ``(block, generation)`` pairs validated against the
+    allocator on every lookup: a block popped off the free list since it
+    was indexed has a bumped generation and the entry is dropped lazily —
+    release never has to notify the index, which is what lets freed blocks
+    stay matchable until the moment they are actually reused.
+
+    Sharing is bitwise-safe because prefill K/V at a given position depends
+    only on the tokens at positions <= it (verified bitwise per backend by
+    tests/test_cow_properties.py): an attached page holds exactly the bits
+    this request's own prefill would have written, and positions past a
+    request's own length are masked out of its attention reads.
+    """
+
+    def __init__(self, alloc: BlockAllocator):
+        self.alloc = alloc
+        self._chain: dict[bytes, tuple[int, int]] = {}
+        self._exact: dict[bytes, tuple[tuple[tuple[int, int], ...], int]] = {}
+
+    @staticmethod
+    def _key(tokens) -> bytes:
+        return hashlib.sha1(
+            np.ascontiguousarray(np.asarray(tokens, np.int32)).tobytes()
+        ).digest()
+
+    def _fresh(self, blk: int, gen: int) -> bool:
+        return self.alloc.generation(blk) == gen
+
+    def match(self, prompt) -> PrefixMatch | None:
+        """Longest cached prefix of ``prompt``; stale entries are pruned on
+        the way. Matched blocks may be live (refcount > 0) or freed-but-
+        cached (refcount 0, still on the free list): both attach, but only
+        live ones cost no free-list headroom — admission accounting treats
+        them differently (see ``ServeEngine._admission_need``)."""
+        prompt = np.asarray(prompt, np.int32)
+        bs = self.alloc.block_size
+        kx = self._key(prompt)
+        hit = self._exact.get(kx)
+        if hit is not None:
+            entry, first_tok = hit
+            if all(self._fresh(b, g) for b, g in entry):
+                return PrefixMatch(tuple(b for b, _ in entry),
+                                   len(prompt), True, first_tok)
+            del self._exact[kx]   # some page was reallocated: entry is dead
+        blocks: list[int] = []
+        for k in range(1, len(prompt) // bs + 1):
+            key = self._key(prompt[:k * bs])
+            e = self._chain.get(key)
+            if e is None:
+                break
+            if not self._fresh(*e):
+                del self._chain[key]
+                break
+            blocks.append(e[0])
+        if not blocks:
+            return None
+        return PrefixMatch(tuple(blocks), len(blocks) * bs, False, None)
+
+    def record(self, prompt, blocks, first_tok: int) -> None:
+        """Index a freshly prefilled prompt: ``blocks`` is its slot's live
+        table prefix (page order), ``first_tok`` the greedy token its
+        prefill produced. Chain entries cover the full blocks; the exact
+        entry covers every page including a partial tail — its offsets past
+        ``len(prompt)`` hold whatever the owner decodes later, which any
+        future attacher masks out (and never overwrites without a fork)."""
+        prompt = np.asarray(prompt, np.int32)
+        bs = self.alloc.block_size
+        blocks = [int(b) for b in blocks]
+        for k in range(1, len(prompt) // bs + 1):
+            b = blocks[k - 1]
+            self._chain[self._key(prompt[:k * bs])] = (
+                b, self.alloc.generation(b))
+        pages = blocks[:self.alloc.blocks_for(len(prompt))]
+        self._exact[self._key(prompt)] = (
+            tuple((b, self.alloc.generation(b)) for b in pages),
+            int(first_tok))
 
 
 class BlockPool:
@@ -276,13 +495,16 @@ class BlockPool:
 
     Device side: ``.data`` — one ``[num_blocks + 1, block_size, *rest]``
     array per per-token cache tensor (index ``num_blocks`` is the trash
-    block). Host side: a :class:`BlockAllocator` (free list, owner map,
+    block). Host side: a :class:`BlockAllocator` (free list, refcounts,
     per-slot ``[max_blocks]`` int32 block tables, exposed unchanged as
     ``.tables`` etc.; unallocated entries point at trash). Allocation is
-    exact — a slot owns ``ceil(tokens / block_size)`` blocks — and checked:
-    double allocation or foreign frees raise immediately, and after a full
-    drain ``free_blocks == num_blocks`` (the leak invariant the property
-    tests pin).
+    exact — a slot holds ``ceil(tokens / block_size)`` table entries, and a
+    physical block may back entries in several slots (shared prefixes) with
+    its refcount equal to the occurrence count. Double allocation or
+    over-frees raise immediately, and after a full drain
+    ``free_blocks == num_blocks`` (the leak invariant the property tests
+    pin). Host-side forks (:meth:`fork_for_write`) must be mirrored on
+    ``.data`` with :func:`copy_block` — the engine jits that pair.
     """
 
     def __init__(self, cfg: ModelConfig, *, num_blocks: int, block_size: int,
@@ -335,8 +557,8 @@ class BlockPool:
         return self.alloc._free
 
     @property
-    def _owner(self) -> np.ndarray:
-        return self.alloc._owner
+    def _refs(self) -> np.ndarray:
+        return self.alloc._refs
 
     @property
     def _count(self) -> np.ndarray:
@@ -361,6 +583,12 @@ class BlockPool:
         :meth:`BlockAllocator.high_water`."""
         return self.alloc.high_water()
 
+    def refcount(self, blk: int) -> int:
+        return self.alloc.refcount(blk)
+
+    def generation(self, blk: int) -> int:
+        return self.alloc.generation(blk)
+
     def ensure(self, slot: int, n_tokens: int) -> bool:
         """Grow ``slot``'s table until it covers ``n_tokens`` positions.
 
@@ -369,6 +597,20 @@ class BlockPool:
         ``capacity`` (the table length)."""
         return self.alloc.ensure(slot, n_tokens)
 
+    def attach(self, slot: int, blocks) -> None:
+        """Alias already-resident ``blocks`` into ``slot``'s table (shared
+        prefix admission); see :meth:`BlockAllocator.attach`."""
+        self.alloc.attach(slot, blocks)
+
+    def needs_fork(self, slot: int, page: int) -> bool:
+        return self.alloc.needs_fork(slot, page)
+
+    def fork_for_write(self, slot: int, page: int) -> tuple[int, int] | None:
+        """Host-side CoW fork; the caller MUST mirror a non-None return on
+        ``.data`` with :func:`copy_block` before the next decode chunk."""
+        return self.alloc.fork_for_write(slot, page)
+
     def release(self, slot: int) -> None:
-        """Free every block the slot owns and reset its table to trash."""
+        """Drop the slot's references; refcount-0 blocks rejoin the free
+        list (content cached until reuse) and its table resets to trash."""
         self.alloc.release(slot)

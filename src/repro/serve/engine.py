@@ -14,7 +14,15 @@ Three modes behind the same ``submit``/``run``/``stream`` API:
   restarts later (greedy decode regenerates its stream bit-for-bit). Prefill
   writes directly into freshly allocated blocks; decode gathers K/V through
   the block table inside the vmapped step and appends to the tail block
-  inside the fused chunk.
+  inside the fused chunk. With ``share_prefix=True`` (default) a
+  :class:`~repro.serve.batch.PrefixIndex` aliases common prompt prefixes to
+  the blocks that already hold them — prefix K/V is written once, admission
+  counts resident shared blocks as zero additional need, an exact
+  whole-prompt hit (resubmission, preemption restart) skips prefill compute
+  entirely, and a shared tail block is copy-on-write forked before any
+  slot's fused append writes to it. Streams stay bitwise identical to the
+  ``share_prefix=False`` drain and to serial decode
+  (tests/test_prefix_sharing.py, tests/test_cow_properties.py).
 
 * ``mode="continuous"`` (default) — a
   :class:`~repro.serve.scheduler.SlotScheduler` owns ``max_batch`` decode
@@ -47,8 +55,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models.config import ModelConfig
-from repro.serve.batch import (BlockPool, init_slot_cache, slot_axes,
-                               write_prefill, write_slot)
+from repro.serve.batch import (BlockPool, PrefixIndex, copy_block,
+                               init_slot_cache, slot_axes, write_prefill,
+                               write_slot)
 from repro.serve.scheduler import Request, SlotScheduler
 from repro.serve.steps import (make_decode_step, make_fused_decode,
                                make_paged_decode, make_paged_kernel_decode,
@@ -64,7 +73,7 @@ class ServeEngine:
                  mode: str = "continuous", decode_chunk: int = 8,
                  prefill_bucket: bool = False, block_size: int = 16,
                  num_blocks: int | None = None, kv_impl: str = "auto",
-                 recorder=None):
+                 share_prefix: bool = True, recorder=None):
         if mode not in ("continuous", "cohort", "paged"):
             raise ValueError(
                 f"mode must be continuous|cohort|paged, got {mode!r}")
@@ -99,6 +108,7 @@ class ServeEngine:
         donate = jax.default_backend() != "cpu"
         self.pool: BlockPool | None = None
         self.kv_impl: str | None = None  # resolved policy (paged mode only)
+        self.prefix: PrefixIndex | None = None  # set in paged mode
         if mode == "continuous":
             axes = slot_axes(cfg, capacity, params=params)
             self._fused_decode = jax.jit(
@@ -150,6 +160,13 @@ class ServeEngine:
                 partial(write_prefill, batch_axes=self.pool.batch_axes,
                         cap_axes=self.pool.cap_axes, block_size=block_size),
                 donate_argnums=(0,) if donate else ())
+            # shared-prefix copy-on-write: a content-hash index over resident
+            # block runs (admission attaches instead of re-writing) plus the
+            # jitted device-side page copy that mirrors fork_for_write.
+            self.prefix = PrefixIndex(self.pool.alloc) if share_prefix \
+                else None
+            self._copy_block = jax.jit(
+                copy_block, donate_argnums=(0,) if donate else ())
         self._next_rid = 0
         self._streamed: dict[int, int] = {}
         self.stats: dict = {}
@@ -382,7 +399,10 @@ class ServeEngine:
         live = np.zeros((B,), bool)
         remaining = np.zeros((B,), np.int32)
         stats = {"prefills": 0, "decode_dispatches": 0, "decode_steps": 0,
-                 "emitted_tokens": 0, "preemptions": 0, "peak_concurrency": 0}
+                 "emitted_tokens": 0, "preemptions": 0, "peak_concurrency": 0,
+                 "prefix_hits": 0, "cow_forks": 0, "prefill_tokens": 0,
+                 "prefill_s": 0.0, "peak_blocks_in_use": 0,
+                 "peak_shared_blocks": 0}
 
         def finish(i: int) -> Request:
             req = sched.release(i)
@@ -413,20 +433,39 @@ class ServeEngine:
             self._export_stats(stats, time.perf_counter() - t0)
             self._evict_in_flight()
 
+    def _admission_need(self, req: Request) -> int:
+        """Free-list headroom admitting ``req`` costs right now: fresh pages
+        its prompt (+1 token) needs beyond the cached-prefix match, plus one
+        free-list pop per matched block that must be *revived* (refcount 0 —
+        resident shared blocks cost zero additional need), plus one block of
+        copy-on-write headroom when an exact match shares a partial tail
+        block (the first decode append forks it)."""
+        pool = self.pool
+        pages = pool.blocks_for(len(req.prompt) + 1)
+        m = self.prefix.match(req.prompt) if self.prefix is not None else None
+        if m is None:
+            return pages
+        resident = sum(1 for b in m.blocks if pool.refcount(b) > 0)
+        need = pages - resident
+        if m.exact and len(req.prompt) % self.block_size:
+            need += 1
+        return need
+
     def _paged_loop(self, tok, idx, live, remaining, stats, finish, preempt):
         sched, pool, eos = self.scheduler, self.pool, self.eos_id
-        chunk = self.decode_chunk
+        prefix, chunk = self.prefix, self.decode_chunk
         while sched.has_work():
             # admission gated on free blocks, not free slots: a request is
-            # admitted iff its prompt (+1 headroom) fits the pool right now.
-            # ``claimed`` front-runs the ensure() calls below so one round
-            # admitting several requests cannot oversubscribe the free list
-            # (can_admit only mutates it when it returns True, i.e. exactly
-            # when the head IS admitted).
+            # admitted iff its prompt (+1 headroom) fits the pool right now,
+            # where already-resident shared prefix blocks count as zero
+            # additional need. ``claimed`` front-runs the attach/ensure calls
+            # below so one round admitting several requests cannot
+            # oversubscribe the free list (can_admit only mutates it when it
+            # returns True, i.e. exactly when the head IS admitted).
             claimed = [0]
 
             def can_admit(r) -> bool:
-                need = pool.blocks_for(len(r.prompt) + 1)
+                need = self._admission_need(r)
                 if claimed[0] + need > pool.free_blocks:
                     # deterministic given the workload: admission is pure
                     # host-side scheduling, so this counter is identical
@@ -437,32 +476,88 @@ class ServeEngine:
                 return True
 
             for i, req in sched.admit(can_admit):
-                first, req_cache = self._prefill_first_token(req)
-                stats["prefills"] += 1
+                # re-match at attach time: an earlier admission this round
+                # may have reused a freed-but-cached block the can_admit
+                # match counted on (its generation bump invalidates it)
+                m = prefix.match(req.prompt) if prefix is not None else None
+                if m is not None and m.exact:
+                    # write-once fast path: every page (incl. the partial
+                    # tail) and the greedy first token are cached — skip
+                    # prefill compute entirely and alias the blocks below
+                    first, req_cache = m.first_tok, None
+                    stats["prefix_hits"] += 1
+                    if not req.first_token_s:
+                        req.first_token_s = time.perf_counter()
+                    self.recorder.counter_add("serve_prefix_hits")
+                    self.recorder.instant("prefix_hit", rid=req.rid,
+                                          cached_tokens=m.n_tokens)
+                else:
+                    t_pf = time.perf_counter()
+                    first, req_cache = self._prefill_first_token(req)
+                    stats["prefills"] += 1
+                    stats["prefill_s"] += time.perf_counter() - t_pf
+                    stats["prefill_tokens"] += len(req.prompt)
                 stats["emitted_tokens"] += 1
                 if req.add_token(first, eos):
                     finish(i)   # prefill token was EOS or budget == 1
                     yield from self._emit([req])
                     continue
-                ok = pool.ensure(i, len(req.prompt))
-                assert ok, "admission reserved the prompt blocks"
-                pool.data = self._write_prefill(
-                    pool.data, req_cache, jnp.asarray(pool.tables[i]))
+                if m is not None:
+                    pool.attach(i, m.blocks)
+                if not pool.ensure(i, len(req.prompt)):
+                    # the can_admit claim was computed against a larger
+                    # match than survived to attach time (same-round block
+                    # reuse) — hand the request back to the queue front
+                    # instead of oversubscribing; it re-admits next round
+                    preempt(i)
+                    continue
+                if m is None or not m.exact:
+                    # write once: matched pages stay untouched (their bits
+                    # are already this prompt's prefix K/V, and the writer
+                    # may share them with live readers) — route them to
+                    # trash and scatter only the unmatched tail pages
+                    tbl = pool.tables[i].copy()
+                    if m is not None:
+                        tbl[:len(m.blocks)] = pool.trash
+                    pool.data = self._write_prefill(
+                        pool.data, req_cache, jnp.asarray(tbl))
+                    if prefix is not None:
+                        prefix.record(req.prompt,
+                                      pool.tables[i, :pool.owned(i)], first)
                 tok[i], idx[i] = first, len(req.prompt)
                 live[i], remaining[i] = True, req.remaining
                 yield from self._emit([req])
             stats["peak_concurrency"] = max(stats["peak_concurrency"],
                                             len(sched.occupied()))
+            stats["peak_blocks_in_use"] = max(
+                stats["peak_blocks_in_use"],
+                pool.num_blocks - pool.free_blocks)
             if not live.any():
                 continue
             # pre-chunk block budget (oldest first): every live slot must
-            # cover its chunk's writes before the device program launches.
-            # If the pool runs dry, evict the youngest request — it has the
-            # least work to redo and re-queues at the front, keeping FIFO.
+            # make its tail page exclusive (copy-on-write fork — shared
+            # blocks are read-only, and the fused append writes through
+            # tables[i, idx // block_size]) and cover its chunk's writes
+            # before the device program launches. If the pool runs dry,
+            # evict the youngest request — it has the least work to redo
+            # and re-queues at the front, keeping FIFO.
             for i, req in sorted(sched.occupied(),
                                  key=lambda t: t[1].admit_seq):
                 if not live[i]:
                     continue
+                page = int(idx[i]) // self.block_size
+                while pool.needs_fork(i, page):
+                    if pool.free_blocks:
+                        old, new = pool.fork_for_write(i, page)
+                        pool.data = self._copy_block(
+                            pool.data, jnp.asarray(old, jnp.int32),
+                            jnp.asarray(new, jnp.int32))
+                        stats["cow_forks"] += 1
+                        self.recorder.counter_add("serve_cow_forks")
+                        break
+                    preempt(sched.youngest())   # may drop the shared ref
+                if not live[i]:
+                    continue   # preempted itself while hunting fork room
                 need = int(idx[i]) + min(chunk, int(remaining[i]))
                 while not pool.ensure(i, need):
                     victim = sched.youngest()
@@ -474,6 +569,8 @@ class ServeEngine:
                     preempt(victim)
                     if victim == i:
                         break
+            stats["peak_shared_blocks"] = max(
+                stats["peak_shared_blocks"], int((pool._refs > 1).sum()))
             self._boundary_gauges(stats)
             if not live.any():
                 continue

@@ -18,11 +18,13 @@ chunk -> ``record_decode()`` with the emitted token grid -> repeat until
 moment any slot frees up, which is the whole point of continuous batching.
 
 Under ``mode="paged"`` the same scheduler becomes block-aware: ``admit()``
-takes a ``can_admit`` gate (the engine passes the block pool's free-block
-check, so admission is bounded by KV HBM actually in use, not by slot
-count), and :meth:`preempt` evicts the *youngest* request back to the queue
-front when a decode chunk would exhaust the pool. A gated admission that
-fails leaves the queue head in place — FIFO order is never rotated.
+takes a ``can_admit`` gate (the engine passes a need-based block check that
+counts already-resident shared-prefix blocks as zero additional need, so
+admission is bounded by KV HBM actually in use, not by slot count), and
+:meth:`preempt` evicts the *youngest* request back to the queue front when
+a decode chunk would exhaust the pool. A gated admission that fails leaves
+the queue head in place — FIFO order is never rotated, even when a request
+further back has a fully-cached prefix and would pass the gate.
 
 Module contract: pure host-side Python/numpy — no JAX, no device arrays, no
 jit; all device state (slot caches, in-scan masking) lives in

@@ -12,6 +12,15 @@ decode is ``decode_step`` vmapped over the slot axis — per-slot scalar
 slot's token stream bitwise independent of whatever its neighbors hold
 (regression-tested against serial one-request-at-a-time decode in
 tests/test_scheduler.py).
+
+Under shared-prefix copy-on-write paging the block tables handed to the
+paged steps may alias the same physical page across slots. That is safe for
+every *read* (both the gather reference and the block-walk kernel only
+index through ``tables[i]``; see test_kernels.py's aliased-tables
+invariance property), but the fused tail append *writes* through
+``tables[i, idx // block_size]`` — the engine's pre-chunk copy-on-write
+fork pass guarantees each live slot's write page is exclusively owned
+(refcount 1) before any step built here launches.
 """
 from __future__ import annotations
 

@@ -419,20 +419,22 @@ def test_blockpool_spec_real_allocator_clean():
 
 
 def test_blockpool_spec_leaky_release_flagged():
-    """A release() that forgets to return blocks to the free list breaks
-    conservation and is caught by the exhaustive sweep."""
+    """A release() that forgets to return refcount-0 blocks to the free
+    list breaks conservation and is caught by the exhaustive sweep."""
     from repro.serve.batch import BlockAllocator
 
     class Leaky(BlockAllocator):
         def release(self, slot):
+            for j in range(self.owned(slot)):
+                self._refs[int(self.tables[slot, j])] -= 1
             self.tables[slot, :] = self.trash
-            self._owner[self._owner == slot] = -1
             self._count[slot] = 0  # blocks never re-enter the free list
 
     found = check_blockpool_spec(
         lambda: Leaky(num_blocks=4, block_size=2, max_batch=2, capacity=4),
         depth=2)
     assert "BLOCKPOOL_SPEC" in rules_of(found)
+    assert any("free list" in f.message for f in found)
 
 
 def test_blockpool_spec_failed_ensure_mutation_flagged():
@@ -443,10 +445,7 @@ def test_blockpool_spec_failed_ensure_mutation_flagged():
             need = min(self.blocks_for(n_tokens),
                        self.max_blocks) - self.owned(slot)
             while need > 0 and self._free:  # partial alloc, then "fail"
-                blk = self._free.pop()
-                self._owner[blk] = slot
-                self.tables[slot, self._count[slot]] = blk
-                self._count[slot] += 1
+                self._append(slot, self._pop_fresh())
                 need -= 1
             return need <= 0
 
@@ -454,6 +453,68 @@ def test_blockpool_spec_failed_ensure_mutation_flagged():
         lambda: Greedy(num_blocks=2, block_size=2, max_batch=2, capacity=8),
         depth=2)
     assert "BLOCKPOOL_SPEC" in rules_of(found)
+
+
+def test_blockpool_spec_leaky_refcount_flagged():
+    """An attach() that aliases a block into another table without bumping
+    its refcount violates ref-agreement the moment the share happens."""
+    from repro.serve.batch import BlockAllocator
+
+    class LeakyRefcount(BlockAllocator):
+        def attach(self, slot, blocks):
+            for blk in blocks:
+                if self._refs[blk] == 0:
+                    self._free.remove(blk)
+                    self._refs[blk] = 1
+                self._append(slot, int(blk))  # live share: refcount not bumped
+
+    found = check_blockpool_spec(
+        lambda: LeakyRefcount(num_blocks=4, block_size=2, max_batch=2,
+                              capacity=4),
+        depth=2)
+    assert "BLOCKPOOL_SPEC" in rules_of(found)
+    assert any("ref-agreement" in f.message for f in found)
+
+
+def test_blockpool_spec_premature_free_flagged():
+    """A release() that returns every block to the free list regardless of
+    remaining references frees blocks other slots still read."""
+    from repro.serve.batch import BlockAllocator
+
+    class PrematureFree(BlockAllocator):
+        def release(self, slot):
+            for j in range(self.owned(slot)):
+                blk = int(self.tables[slot, j])
+                self._refs[blk] -= 1
+                self._free.append(blk)  # freed even while still referenced
+            self.tables[slot, :] = self.trash
+            self._count[slot] = 0
+
+    found = check_blockpool_spec(
+        lambda: PrematureFree(num_blocks=4, block_size=2, max_batch=2,
+                              capacity=4),
+        depth=3)
+    assert "BLOCKPOOL_SPEC" in rules_of(found)
+    assert any("premature free" in f.message or "duplicates" in f.message
+               for f in found)
+
+
+def test_blockpool_spec_write_without_fork_flagged():
+    """A fork_for_write() that never forks leaves the write target shared —
+    the model write op flags it (the fused append would clobber a block
+    other slots are reading)."""
+    from repro.serve.batch import BlockAllocator
+
+    class NoForkWrite(BlockAllocator):
+        def fork_for_write(self, slot, page):
+            return None  # claims exclusivity without ever forking
+
+    found = check_blockpool_spec(
+        lambda: NoForkWrite(num_blocks=4, block_size=2, max_batch=2,
+                            capacity=4),
+        depth=3)
+    assert "BLOCKPOOL_SPEC" in rules_of(found)
+    assert any("without fork" in f.message for f in found)
 
 
 _KERNEL_SRC = {"src/repro/kernels/myk.py": textwrap.dedent("""\

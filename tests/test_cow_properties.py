@@ -1,0 +1,275 @@
+"""Refcount/stream property suite for shared-prefix copy-on-write paging.
+
+Random traces of submit-with-shared-prefix / divergent-write / preempt /
+EOS / release events drive a live :class:`ServeEngine` whose allocator is
+swapped for a checking subclass that re-validates the full invariant set
+(refcount == table occurrence count, free list == refcount-0 set, no
+leaks, no double frees) after **every** mutation, and whose decode
+dispatch asserts no chunk ever launches with a live slot appending into a
+block it shares. On top of the structural invariants, every per-request
+stream must be bitwise equal between a sharing-on and a sharing-off drain
+of the same workload.
+
+The trace runner is exercised two ways: a seeded deterministic sweep that
+always runs, and a `hypothesis` sweep (skipped where the package is
+absent) drawing the same parameters adversarially. A standalone
+host-level sweep hammers the bare allocator with much longer random op
+sequences, and a bitwise-stability test pins the property the whole
+design rests on: prefill K/V at a position depends only on the tokens at
+positions <= it, so an attached page holds exactly the bits the attacher
+would have written.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.contracts import allocator_invariants
+from repro.configs import get
+from repro.models import cache_capacity_axes, init_params, prefill
+from repro.serve import ServeEngine
+from repro.serve.batch import BlockAllocator, _strip_idx
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get("smollm-360m").reduced().with_overrides(
+        d_model=32, n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64, vocab=64)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+class CheckedAllocator(BlockAllocator):
+    """BlockAllocator that re-validates every refcount/free-list/table
+    invariant after each public mutation, so a violation surfaces at the
+    op that caused it, not at the post-drain audit."""
+
+    def _check(self, op: str) -> None:
+        msg = allocator_invariants(self, label=f"after {op}")
+        assert msg is None, msg
+
+    def ensure(self, slot, n_tokens):
+        ok = super().ensure(slot, n_tokens)
+        self._check(f"ensure({slot}, {n_tokens})")
+        return ok
+
+    def attach(self, slot, blocks):
+        super().attach(slot, blocks)
+        self._check(f"attach({slot}, {list(map(int, blocks))})")
+
+    def fork_for_write(self, slot, page):
+        out = super().fork_for_write(slot, page)
+        self._check(f"fork_for_write({slot}, {page})")
+        return out
+
+    def release(self, slot):
+        super().release(slot)
+        self._check(f"release({slot})")
+
+
+def _checked_engine(model, *, share, block_size, num_blocks, max_batch,
+                    eos_id, capacity=16):
+    """Paged engine with the checking allocator spliced in (pool and prefix
+    index share one allocator instance, so both are swapped), plus a decode
+    wrapper asserting write-page exclusivity before every chunk."""
+    cfg, params = model
+    eng = ServeEngine(cfg, params, capacity=capacity, max_batch=max_batch,
+                      decode_chunk=2, eos_id=eos_id, mode="paged",
+                      block_size=block_size, num_blocks=num_blocks,
+                      share_prefix=share)
+    checked = CheckedAllocator(num_blocks=num_blocks, block_size=block_size,
+                               max_batch=max_batch, capacity=capacity)
+    eng.pool.alloc = checked
+    if eng.prefix is not None:
+        eng.prefix.alloc = checked
+
+    inner = eng._paged_decode
+
+    def guarded(params_, tok, data, tables, idx, live, remaining):
+        idx_h, live_h = np.asarray(idx), np.asarray(live)
+        for s in np.nonzero(live_h)[0]:
+            page = int(idx_h[s]) // block_size
+            assert page < checked.owned(int(s)), \
+                f"slot {s} decoding past its allocation (page {page})"
+            blk = int(checked.tables[int(s), page])
+            assert checked.refcount(blk) == 1, (
+                f"chunk launched with live slot {s} appending into shared "
+                f"block {blk} (refcount {checked.refcount(blk)}) — "
+                "copy-on-write fork missing")
+        return inner(params_, tok, data, tables, idx, live, remaining)
+
+    eng._paged_decode = guarded
+    return eng
+
+
+def _draw_trace(draw_int, draw_choice, vocab):
+    """One random workload + engine shape, from any integer source.
+
+    ``draw_int(lo, hi)`` inclusive; ``draw_choice(seq)``. Prompts are built
+    from a drawn pool of common prefixes so traces mix exact duplicates
+    (resubmission / restart hits), shared-prefix divergence (CoW forks) and
+    unrelated prompts; pool sizes range from barely-fits-one to roomy so a
+    good fraction of traces preempt shared-block holders mid-decode.
+    """
+    block_size = draw_choice([2, 4])
+    max_batch = draw_int(2, 3)
+    eos_id = draw_choice([None, 0, 7])
+    n_prefix = draw_int(1, 2)
+    prefixes = [[draw_int(0, vocab - 1) for _ in range(draw_int(2, 6))]
+                for _ in range(n_prefix)]
+    workload = []
+    for _ in range(draw_int(2, 5)):
+        kind = draw_choice(["shared", "dup", "lone"])
+        if kind == "dup" and workload:
+            prompt = list(workload[draw_int(0, len(workload) - 1)][0])
+        elif kind == "lone":
+            prompt = [draw_int(0, vocab - 1)
+                      for _ in range(draw_int(1, 6))]
+        else:
+            pfx = prefixes[draw_int(0, n_prefix - 1)]
+            prompt = pfx + [draw_int(0, vocab - 1)
+                            for _ in range(draw_int(0, 4))]
+        workload.append((prompt, draw_int(1, 6)))
+    need = max(-(-(len(p) + b) // block_size) for p, b in workload)
+    num_blocks = draw_int(need, need + 16 // block_size)
+    return dict(block_size=block_size, max_batch=max_batch, eos_id=eos_id,
+                num_blocks=num_blocks, workload=workload)
+
+
+def _run_trace(model, t):
+    """Drain the trace sharing-on (checked) and sharing-off; assert bitwise
+    stream equality per request and a fully-reclaimed pool on both sides."""
+    engines, results = [], []
+    for share in (True, False):
+        eng = _checked_engine(model, share=share,
+                              block_size=t["block_size"],
+                              num_blocks=t["num_blocks"],
+                              max_batch=t["max_batch"], eos_id=t["eos_id"])
+        rids = [eng.submit(np.asarray(p, np.int32), b)
+                for p, b in t["workload"]]
+        res = eng.run()
+        engines.append(eng)
+        results.append([res[r] for r in rids])
+    assert results[0] == results[1], t
+    for eng in engines:
+        assert eng.pool.free_blocks == eng.pool.num_blocks, t
+        assert (eng.pool._refs == 0).all(), t
+        assert (eng.pool.tables == eng.pool.trash).all(), t
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_cow_traces_seeded(model, seed):
+    """Deterministic sweep of the shared trace runner — runs everywhere,
+    including environments without hypothesis."""
+    rng = np.random.default_rng(seed)
+    t = _draw_trace(lambda lo, hi: int(rng.integers(lo, hi + 1)),
+                    lambda seq: seq[int(rng.integers(len(seq)))],
+                    model[0].vocab)
+    _run_trace(model, t)
+
+
+def test_cow_traces_hypothesis(model):
+    hypothesis = pytest.importorskip(
+        "hypothesis", reason="adversarial sweeps need hypothesis")
+    from hypothesis import strategies as st
+
+    @hypothesis.settings(max_examples=8, deadline=None, database=None)
+    @hypothesis.given(st.data())
+    def prop(data):
+        t = _draw_trace(lambda lo, hi: data.draw(st.integers(lo, hi)),
+                        lambda seq: data.draw(st.sampled_from(seq)),
+                        model[0].vocab)
+        _run_trace(model, t)
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# Host-level allocator hammering: long random op sequences, no model
+# ---------------------------------------------------------------------------
+
+def _hammer_allocator(draw_int, draw_choice, n_ops=120):
+    """Random ensure/attach/fork/release sequences on the bare checked
+    allocator — every op is followed by the full invariant audit, releases
+    of empty slots and over-attaches are expected to raise, and the run
+    must end fully reclaimed."""
+    bs = draw_choice([2, 4])
+    a = CheckedAllocator(num_blocks=draw_int(3, 8), block_size=bs,
+                         max_batch=3, capacity=8 * bs)
+    for _ in range(n_ops):
+        op = draw_choice(["ensure", "attach", "fork", "release"])
+        s = draw_int(0, a.max_batch - 1)
+        if op == "ensure":
+            a.ensure(s, draw_int(1, a.capacity))
+        elif op == "attach":
+            d = draw_int(0, a.max_batch - 1)
+            k = min(a.owned(s), a.max_blocks - a.owned(d))
+            if d != s and k > 0:
+                a.attach(d, [int(b) for b in a.tables[s, :draw_int(1, k)]])
+        elif op == "fork":
+            if a.owned(s):
+                page = draw_int(0, a.owned(s) - 1)
+                if not (a.needs_fork(s, page) and not a.free_blocks):
+                    a.fork_for_write(s, page)
+        elif op == "release":
+            if a.owned(s):
+                a.release(s)
+    for s in range(a.max_batch):
+        if a.owned(s):
+            a.release(s)
+    assert a.free_blocks == a.num_blocks
+    assert (a._refs == 0).all()
+    assert (a.tables == a.trash).all()
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_allocator_hammer_seeded(seed):
+    rng = np.random.default_rng(seed)
+    _hammer_allocator(lambda lo, hi: int(rng.integers(lo, hi + 1)),
+                      lambda seq: seq[int(rng.integers(len(seq)))])
+
+
+def test_allocator_hammer_hypothesis():
+    hypothesis = pytest.importorskip(
+        "hypothesis", reason="adversarial sweeps need hypothesis")
+    from hypothesis import strategies as st
+
+    @hypothesis.settings(max_examples=50, deadline=None, database=None)
+    @hypothesis.given(st.data())
+    def prop(data):
+        _hammer_allocator(lambda lo, hi: data.draw(st.integers(lo, hi)),
+                          lambda seq: data.draw(st.sampled_from(seq)),
+                          n_ops=60)
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# The physical property sharing rests on
+# ---------------------------------------------------------------------------
+
+def test_prefix_kv_bitwise_stable_under_extension(model):
+    """Prefilling a prompt and prefilling an extension of it write bitwise
+    identical K/V at every shared-prefix position (this backend's einsum
+    attention makes masked future positions contribute exact zeros) — the
+    load-bearing fact that lets an attached page stand in for the bits the
+    attacher's own prefill would have produced."""
+    cfg, params = model
+    rng = np.random.default_rng(0)
+    base = rng.integers(0, cfg.vocab, size=9).astype(np.int32)
+    ext = np.concatenate(
+        [base, rng.integers(0, cfg.vocab, size=4).astype(np.int32)])
+    _, c1 = prefill(cfg, params, jnp.asarray(base[None]), 16)
+    _, c2 = prefill(cfg, params, jnp.asarray(ext[None]), 16)
+    axes = _strip_idx(cache_capacity_axes(cfg, 16, params=params))
+
+    def shared_prefix_equal(l1, l2, ax):
+        sl = [slice(None)] * np.asarray(l1).ndim
+        sl[ax] = slice(0, len(base))
+        np.testing.assert_array_equal(np.asarray(l1)[tuple(sl)],
+                                      np.asarray(l2)[tuple(sl)])
+        return 1
+
+    counted = jax.tree.map(shared_prefix_equal, _strip_idx(dict(c1)),
+                           _strip_idx(dict(c2)), axes)
+    assert sum(jax.tree.leaves(counted)) > 0

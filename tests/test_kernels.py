@@ -228,6 +228,71 @@ def test_paged_layout_invariance(seed):
     assert bool(jnp.all(outs[0] == outs[1])), "layout changed the bits"
 
 
+@settings(max_examples=12, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_paged_aliased_tables_invariance(seed):
+    """Property: cross-slot aliasing is invisible to the block walk.
+
+    Shared-prefix copy-on-write makes several slots' tables point at the
+    same physical page. The kernel only ever reads through tables[i], so a
+    pool where the common prefix pages are stored once and aliased must
+    produce bit-identical outputs to a pool where every slot holds a
+    private copy of the same logical content — for the Pallas walk and the
+    gather oracle alike."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    bs, L, Hkv, Dh, B = 8, 2, 2, 16, 3
+    n_shared = int(rng.integers(1, 3))           # full prefix pages shared
+    tails = [int(rng.integers(0, 10)) for _ in range(B)]
+    lengths = [n_shared * bs + t for t in tails]
+    n_pages = -(-max(lengths) // bs)
+    key = jax.random.PRNGKey(seed)
+    k_log = jax.random.normal(key, (B, n_pages * bs, L, Hkv, Dh))
+    v_log = jax.random.normal(jax.random.fold_in(key, 1),
+                              (B, n_pages * bs, L, Hkv, Dh))
+    # every slot sees the same logical prefix content
+    k_log = k_log.at[:, :n_shared * bs].set(k_log[0, :n_shared * bs])
+    v_log = v_log.at[:, :n_shared * bs].set(v_log[0, :n_shared * bs])
+    q = jax.random.normal(jax.random.fold_in(key, 2), (B, 4, Dh))
+
+    def place(aliased):
+        num_blocks = B * n_pages + n_shared + 2
+        kp = np.array(jax.random.normal(
+            jax.random.fold_in(key, 3 + int(aliased)),
+            (num_blocks + 1, bs, L, Hkv, Dh)))   # garbage background
+        vp = kp[::-1].copy()
+        tables = np.full((B, n_pages), num_blocks, np.int32)
+        nxt = 0
+        shared_run = None
+        for i, n in enumerate(lengths):
+            for j in range(-(-n // bs)):
+                if aliased and j < n_shared and shared_run is not None:
+                    tables[i, j] = shared_run[j]  # alias slot 0's page
+                    continue
+                blk = nxt; nxt += 1
+                tables[i, j] = blk
+                kp[blk] = np.asarray(k_log[i, j * bs:(j + 1) * bs])
+                vp[blk] = np.asarray(v_log[i, j * bs:(j + 1) * bs])
+            if aliased and shared_run is None:
+                shared_run = [int(t) for t in tables[i, :n_shared]]
+        return (jnp.asarray(kp, jnp.float32), jnp.asarray(vp, jnp.float32),
+                jnp.asarray(tables))
+
+    lens = jnp.asarray(lengths, jnp.int32)
+    qf = q.astype(jnp.float32)
+    outs = {}
+    for aliased in (False, True):
+        kp, vp, tables = place(aliased)
+        outs[aliased] = (
+            paged_attention_pallas(qf, kp, vp, tables, lens, 1,
+                                   interpret=True),
+            paged_attention_ref(qf, kp, vp, tables, lens, 1))
+    assert bool(jnp.all(outs[True][0] == outs[False][0])), \
+        "aliased tables changed the Pallas walk's bits"
+    assert bool(jnp.all(outs[True][1] == outs[False][1])), \
+        "aliased tables changed the oracle's bits"
+
+
 @settings(max_examples=8, deadline=None)
 @given(seed=st.integers(0, 10_000))
 def test_rglru_decay_bounded_state(seed):

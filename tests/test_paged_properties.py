@@ -72,7 +72,7 @@ def test_paged_traces_no_leak_no_double_alloc_bitwise(model, data):
         ref = _serial_greedy(cfg, params, prompt, budget, eos_id=eos_id,
                              capacity=16)
         assert results[rid] == ref, (rid, prompt, budget, eos_id)
-    # no leak: every block back on the free list, owner map clear
+    # no leak: every block back on the free list, all refcounts at zero
     assert eng.pool.free_blocks == eng.pool.num_blocks
-    assert (eng.pool._owner == -1).all()
+    assert (eng.pool._refs == 0).all()
     assert (eng.pool.tables == eng.pool.trash).all()
