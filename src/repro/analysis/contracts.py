@@ -232,6 +232,16 @@ def _spec_op(a, op) -> str | None:
     elif kind == "attach_free":
         if a.owned(op[1]) == 0 and a.free_blocks:
             a.attach(op[1], [a._free[0]])   # revive a freed-but-cached block
+    elif kind == "trim":
+        # speculative rewind: shrink the slot to cover op[2] tokens; must
+        # behave like a partial release (tail references dropped, trash
+        # padding restored — the shared invariant sweep checks both)
+        before_owned = a.owned(op[1])
+        a.trim(op[1], op[2])
+        want = min(a.blocks_for(op[2]), a.max_blocks)
+        if a.owned(op[1]) != min(before_owned, want):
+            return (f"trim left owned()={a.owned(op[1])}, expected "
+                    f"{min(before_owned, want)}")
     elif kind == "write":
         s = op[1]
         if not a.owned(s):
@@ -275,7 +285,8 @@ def check_blockpool_spec(factory: Callable[[], object] | None = None,
            + [("release", s) for s in slots]
            + [("attach", d, s) for d in slots for s in slots if d != s]
            + [("attach_free", s) for s in slots]
-           + [("write", s) for s in slots])
+           + [("write", s) for s in slots]
+           + [("trim", s, n) for s in slots for n in (0, 1)])
 
     out: list[Finding] = []
 

@@ -184,6 +184,35 @@ def _serve_paged_kernel_build():
     return fn, (_sds(params), tok, _sds(pool.data), tables, idx, live, rem)
 
 
+def _serve_spec_build():
+    # Speculative decode chunk: draft propose -> fused multi-token verify ->
+    # longest-prefix accept, traced with the reference verify attention so
+    # it stages on any backend. Draft = 1-layer variant of the target.
+    from repro.models import init_params
+    from repro.serve.batch import BlockPool, init_slot_cache, slot_axes
+    from repro.serve.spec import make_spec_decode
+    cfg = _tiny_model_cfg()
+    dcfg = cfg.with_overrides(n_layers=1)
+    B, capacity, block_size, k, rounds = 2, 32, 8, 2, 2
+    pool = BlockPool(cfg, num_blocks=B * capacity // block_size,
+                     block_size=block_size, max_batch=B, capacity=capacity)
+    daxes = slot_axes(dcfg, capacity)
+    fn = make_spec_decode(cfg, dcfg, daxes, block_size, k, rounds, eos_id=2,
+                          impl="reference")
+    params = jax.eval_shape(lambda key: init_params(cfg, key),
+                            jax.random.PRNGKey(0))
+    dparams = jax.eval_shape(lambda key: init_params(dcfg, key),
+                             jax.random.PRNGKey(1))
+    dcache = jax.eval_shape(lambda: init_slot_cache(dcfg, B, capacity))
+    tok = jax.ShapeDtypeStruct((B,), np.int32)
+    tables = jax.ShapeDtypeStruct((B, pool.max_blocks), np.int32)
+    idx = jax.ShapeDtypeStruct((B,), np.int32)
+    live = jax.ShapeDtypeStruct((B,), np.bool_)
+    rem = jax.ShapeDtypeStruct((B,), np.int32)
+    return fn, (_sds(params), _sds(dparams), tok, _sds(pool.data), tables,
+                idx, live, rem, _sds(dcache))
+
+
 # ---------------------------------------------------------------------------
 # Data: device-resident samplers per model family
 # ---------------------------------------------------------------------------
@@ -218,6 +247,8 @@ def iter_entries(tags: tuple[str, ...] | None = None) -> list[EntryPoint]:
     entries.append(EntryPoint(name="serve:paged_kernel_decode",
                               build=_serve_paged_kernel_build,
                               tags=("serve",)))
+    entries.append(EntryPoint(name="serve:spec_decode",
+                              build=_serve_spec_build, tags=("serve",)))
     for arch, kw in (("smollm-360m", {}),
                      ("chameleon-34b", {"n_img_tokens": 4}),
                      ("whisper-tiny", {"src_len": 8})):

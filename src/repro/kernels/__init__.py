@@ -1,10 +1,13 @@
 # TPU-target Pallas kernels for the substrate's compute hot-spots
 # (the paper itself has no kernel-level contribution — see DESIGN.md §3).
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.ops import attention, on_tpu, paged_attention, rglru
-from repro.kernels.paged_attention import paged_attention as paged_attention_pallas
-from repro.kernels.ref import (attention_ref, paged_attention_ref, rglru_ref,
-                               wkv6_ref)
+from repro.kernels.ops import (attention, on_tpu, paged_attention,
+                               paged_attention_multi, rglru)
+from repro.kernels.paged_attention import (
+    paged_attention as paged_attention_pallas,
+    paged_attention_multi as paged_attention_multi_pallas)
+from repro.kernels.ref import (attention_ref, paged_attention_multi_ref,
+                               paged_attention_ref, rglru_ref, wkv6_ref)
 from repro.kernels.rglru_scan import rglru_scan
 from repro.kernels.wkv6_scan import wkv6_scan
 
@@ -19,9 +22,12 @@ KERNEL_ORACLES: dict[str, tuple[str, str]] = {
     "rglru_scan": ("rglru_ref", "tests/test_kernels.py"),
     "wkv6_scan": ("wkv6_ref", "tests/test_wkv_kernel.py"),
     "paged_attention": ("paged_attention_ref", "tests/test_kernels.py"),
+    "paged_attention_multi": ("paged_attention_multi_ref",
+                              "tests/test_paged_kernel.py"),
 }
 
 __all__ = ["KERNEL_ORACLES", "attention", "attention_ref", "flash_attention",
-           "on_tpu", "paged_attention", "paged_attention_pallas",
-           "paged_attention_ref", "rglru", "rglru_ref", "rglru_scan",
-           "wkv6_ref", "wkv6_scan"]
+           "on_tpu", "paged_attention", "paged_attention_multi",
+           "paged_attention_multi_pallas", "paged_attention_multi_ref",
+           "paged_attention_pallas", "paged_attention_ref", "rglru",
+           "rglru_ref", "rglru_scan", "wkv6_ref", "wkv6_scan"]

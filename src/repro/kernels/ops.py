@@ -11,8 +11,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.paged_attention import paged_attention as paged_attention_kernel
-from repro.kernels.ref import attention_ref, paged_attention_ref, rglru_ref
+from repro.kernels.paged_attention import (
+    paged_attention as paged_attention_kernel,
+    paged_attention_multi as paged_attention_multi_kernel)
+from repro.kernels.ref import (attention_ref, paged_attention_multi_ref,
+                               paged_attention_ref, rglru_ref)
 from repro.kernels.rglru_scan import rglru_scan
 
 
@@ -45,6 +48,24 @@ def paged_attention(q, k_pages, v_pages, tables, lengths, layer=0, *,
             q, k_pages, v_pages, tables, lengths, layer,
             interpret=(not on_tpu()) if interpret is None else interpret)
     return paged_attention_ref(q, k_pages, v_pages, tables, lengths, layer)
+
+
+def paged_attention_multi(q, k_pages, v_pages, tables, lengths, layer=0, *,
+                          force_pallas: bool = False,
+                          interpret: bool | None = None):
+    """Dispatch: Pallas multi-token block-table attention (the speculative
+    verify read path) on TPU, jnp-gather reference elsewhere.
+
+    Layout: q [B, Q, H, Dh] (Q candidate tokens per slot, K/V already
+    appended); k_pages/v_pages [num_blocks + 1, block_size, L, Hkv, Dh];
+    tables [B, n_pages] int32; lengths [B] int32 valid-after-append counts
+    (0 = dead slot)."""
+    if on_tpu() or force_pallas:
+        return paged_attention_multi_kernel(
+            q, k_pages, v_pages, tables, lengths, layer,
+            interpret=(not on_tpu()) if interpret is None else interpret)
+    return paged_attention_multi_ref(q, k_pages, v_pages, tables, lengths,
+                                     layer)
 
 
 def rglru(a, x, *, force_pallas: bool = False, interpret: bool | None = None):

@@ -90,6 +90,125 @@ def _paged_kernel(tables_ref, lengths_ref, layer_ref, q_ref, k_ref, v_ref,
         o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
 
 
+def _paged_multi_kernel(tables_ref, lengths_ref, layer_ref, q_ref, k_ref,
+                        v_ref, o_ref, m_scr, l_scr, acc_scr, *, scale: float,
+                        block_size: int, n_pages: int, q_len: int, group: int):
+    """Q query rows per slot: the flattened [Q*G, ...] row axis carries both
+    the window position (row // G) and the grouped query head (row % G); the
+    per-row causal mask is the only place the two kernels differ."""
+    b = pl.program_id(0)
+    j = pl.program_id(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    length = lengths_ref[b]
+
+    # page-level pruning on the LAST row's reach (row Q-1 sees the most):
+    # a page past it holds nothing any row may read (dead slots: length 0)
+    @pl.when(j * block_size < length)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # [Q*G, Dh]
+        k = k_ref[0, :, 0, 0].astype(jnp.float32)            # [bs, Dh]
+        v = v_ref[0, :, 0, 0].astype(jnp.float32)            # [bs, Dh]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+
+        # per-row causal mask: row r (window position r = flat // G) attends
+        # positions < length - (Q - 1 - r); the tail-block mask is subsumed
+        pos = j * block_size + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        row = jax.lax.broadcasted_iota(jnp.int32, s.shape, 0) // group
+        s = jnp.where(pos < length - (q_len - 1 - row), s, NEG_INF)
+
+        m_prev = m_scr[...]                                  # [Q*G, 1]
+        m_cur = jnp.max(s, axis=-1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)                               # [Q*G, bs]
+        alpha = jnp.exp(m_prev - m_new)                      # [Q*G, 1]
+        l_scr[...] = alpha * l_scr[...] + jnp.sum(p, axis=-1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(j == n_pages - 1)
+    def _finalize():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)   # fully-masked row: zeros, not NaN
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention_multi(q, k_pages, v_pages, tables, lengths, layer=0, *,
+                          interpret: bool = False):
+    """Block-table attention for a window of Q candidate tokens per slot —
+    the speculative-decoding verify read path (and the stepping stone toward
+    paged prefill): one batched dispatch attends all Q rows causally through
+    the block table.
+
+    q: [B, Q, H, Dh] — Q new tokens per slot, RoPE already applied, their K/V
+      already appended to the pool at positions ``lengths - Q .. lengths-1``.
+    k_pages/v_pages: [num_blocks + 1, block_size, L, Hkv, Dh] physical pool.
+    tables: [B, n_pages] int32 block tables (clamped or full width).
+    lengths: [B] int32 — valid KV count per slot AFTER all Q appends
+      (0 = dead slot -> zeros). Row r masks to ``< lengths - (Q - 1 - r)``.
+    layer: int32 scalar selecting the transformer layer inside the pool.
+
+    Returns [B, Q, H, Dh] in q.dtype. Identical grid/scratch scheme to
+    :func:`paged_attention` with the row axis widened from G to Q*G.
+    """
+    B, Q, H, Dh = q.shape
+    _, block_size, L, Hkv, _ = k_pages.shape
+    assert H % Hkv == 0, (H, Hkv)
+    G = H // Hkv
+    n_pages = tables.shape[1]
+    scale = Dh ** -0.5
+    # [B, Q, Hkv, G, Dh] -> [B, Hkv, Q*G, Dh]: rows ordered window-major so
+    # the kernel recovers the window position as row // G
+    q4 = q.reshape(B, Q, Hkv, G, Dh).transpose(0, 2, 1, 3, 4).reshape(
+        B, Hkv, Q * G, Dh)
+
+    def kv_map(b, h, j, tables, lengths, layer):
+        # same DMA-skip clamp as the single-token kernel: the LAST row's
+        # reach bounds every row's, so pages past it re-target the last
+        # valid page and their (pruned) step skips the copy
+        last = jnp.maximum(lengths[b] - 1, 0) // block_size
+        return (tables[b, jnp.minimum(j, last)], 0, layer[0], h, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(B, Hkv, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, Q * G, Dh),
+                         lambda b, h, j, *refs: (b, h, 0, 0)),
+            pl.BlockSpec((1, block_size, 1, 1, Dh), kv_map),
+            pl.BlockSpec((1, block_size, 1, 1, Dh), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Q * G, Dh),
+                               lambda b, h, j, *refs: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((Q * G, 1), jnp.float32),    # running max m
+            pltpu.VMEM((Q * G, 1), jnp.float32),    # running denom l
+            pltpu.VMEM((Q * G, Dh), jnp.float32),   # fp32 accumulator
+        ],
+    )
+    kernel = functools.partial(_paged_multi_kernel, scale=scale,
+                               block_size=block_size, n_pages=n_pages,
+                               q_len=Q, group=G)
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, Hkv, Q * G, Dh), q.dtype),
+        interpret=interpret,
+    )(tables.astype(jnp.int32), lengths.astype(jnp.int32),
+      jnp.asarray(layer, jnp.int32).reshape(1), q4, k_pages, v_pages)
+    return out.reshape(B, Hkv, Q, G, Dh).transpose(0, 2, 1, 3, 4).reshape(
+        B, Q, H, Dh)
+
+
 @functools.partial(jax.jit, static_argnames=("interpret",))
 def paged_attention(q, k_pages, v_pages, tables, lengths, layer=0, *,
                     interpret: bool = False):

@@ -56,6 +56,40 @@ def paged_attention_ref(q, k_pages, v_pages, tables, lengths, layer=0):
     return o.reshape(B, H, Dh).astype(q.dtype)
 
 
+def paged_attention_multi_ref(q, k_pages, v_pages, tables, lengths, layer=0):
+    """Multi-query-position decode attention through a block table — the
+    speculative-verify oracle (full-softmax, no blocking).
+
+    q: [B, Q, H, Dh] — a window of Q candidate tokens per slot, already
+    appended to the pool at positions ``lengths - Q .. lengths - 1``;
+    k_pages/v_pages: [num_blocks + 1, block_size, L, Hkv, Dh] physical pool
+    (trailing block is trash); tables: [B, n_pages] int32; lengths: [B] int32
+    valid KV count per slot AFTER appending all Q tokens (0 = dead slot ->
+    zeros out); layer: which transformer layer to read.
+
+    Row ``r`` sits at absolute position ``lengths - Q + r``, so it may attend
+    positions ``< lengths - (Q - 1 - r)`` — per-row causal masking over the
+    shared window. Q=1 degenerates to :func:`paged_attention_ref`.
+    """
+    B, Q, H, Dh = q.shape
+    _, block_size, _, Hkv, _ = k_pages.shape
+    G = H // Hkv
+    kl = jnp.take(k_pages, layer, axis=2)         # [N+1, bs, Hkv, Dh]
+    vl = jnp.take(v_pages, layer, axis=2)
+    k = kl[tables].reshape(B, -1, Hkv, Dh)        # [B, n_pages*bs, Hkv, Dh]
+    v = vl[tables].reshape(B, -1, Hkv, Dh)
+    qg = q.reshape(B, Q, Hkv, G, Dh).astype(jnp.float32) * Dh ** -0.5
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k.astype(jnp.float32))
+    row_len = lengths[:, None] - (Q - 1 - jnp.arange(Q))[None]     # [B, Q]
+    valid = (jnp.arange(s.shape[-1])[None, None]
+             < row_len[:, :, None])                                # [B, Q, S]
+    s = jnp.where(valid[:, None, None], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # dead slots: fully-masked rows
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return o.reshape(B, Q, H, Dh).astype(q.dtype)
+
+
 def rglru_ref(a, x, h0=None):
     """Linear recurrence h_t = a_t * h_{t-1} + x_t. a/x: [B, S, R]."""
     B, S, R = a.shape

@@ -90,3 +90,68 @@ def paged_decode_step(cfg: ModelConfig, params, tok, pool_kv, tables, blk,
     x = apply_norm(cfg, params["final_norm"], x)
     logits = unembed(cfg, params["embed"], x)
     return logits[:, -1], {"k": pk, "v": pv}
+
+
+def paged_verify_step(cfg: ModelConfig, params, toks, pool_kv, tables, blks,
+                      offs, positions, lengths, *, attend):
+    """Multi-token verify for speculative decoding: append a window of Q
+    candidate tokens to each slot's tail block(s) and attend them causally
+    through the block table in ONE batched dispatch.
+
+    toks: [B, Q] int32 — per slot, the current token followed by Q-1 draft
+    candidates; pool_kv: ``{"k", "v"}`` pools as in :func:`paged_decode_step`;
+    blks/offs: [B, Q] write coordinates for the window
+    (:func:`repro.serve.batch.tail_targets_multi` — dead slots and positions
+    past the table's coverage already routed to the trash block);
+    positions: [B, Q] absolute positions (``idx .. idx + Q - 1`` live);
+    lengths: [B] valid KV count after ALL Q appends (``idx + Q`` live, 0
+    dead).
+
+    ``attend(q [B, Q, H, Dh], k_pages, v_pages, tables, lengths, layer)`` is
+    the multi-token paged-attention implementation
+    (``repro.kernels.ops.paged_attention_multi`` or its oracle) — row ``r``
+    masks to positions ``< lengths - (Q - 1 - r)``, i.e. write-then-read
+    causal over the shared window.
+
+    Returns ``(logits [B, Q, V], new pool_kv)`` — row ``r``'s argmax is the
+    target model's greedy continuation after consuming ``toks[:, :r + 1]``,
+    which is exactly what the accept rule compares drafts against. Q = 1
+    reproduces :func:`paged_decode_step`'s computation (same math, batched
+    over one extra axis).
+    """
+    assert cfg.family in ("dense", "vlm", "moe"), cfg.family
+    B, Q = toks.shape
+    x = embed(cfg, params["embed"], toks)                  # [B, Q, D]
+
+    def body(carry, xs):
+        h, pk, pv = carry
+        lp, layer = xs
+        hn = apply_norm(cfg, lp["norm1"], h)
+        q, k, v = qkv(cfg, lp["attn"], hn)                 # [B,Q,H/Hkv,Dh]
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+        # fused window append: one [B, Q]-indexed scatter per pool leaf;
+        # rejected candidates leave garbage past the accepted length, which
+        # the next window's writes overwrite before any row can read it
+        pk = pk.at[blks, offs, layer].set(k.astype(pk.dtype))
+        pv = pv.at[blks, offs, layer].set(v.astype(pv.dtype))
+        a = attend(q, pk, pv, tables, lengths, layer)      # [B, Q, H, Dh]
+        h = h + dense(lp["attn"]["wo"], a.reshape(B, Q, -1), cfg.dtype)
+        hn2 = apply_norm(cfg, lp["norm2"], h)
+        if "moe" in lp:
+            # routing stays per-slot AND per-position: expert capacity sees
+            # one token per (request, window row), so verify routing drops
+            # exactly what the one-token-at-a-time decode path would drop
+            h = h + jax.vmap(jax.vmap(
+                lambda o: moe_mlp(cfg, lp["moe"], o[None, None])[0][0, 0]))(
+                hn2)
+        else:
+            h = h + mlp(cfg, lp["mlp"], hn2)
+        return (h, pk, pv), None
+
+    (x, pk, pv), _ = jax.lax.scan(
+        body, (x, pool_kv["k"], pool_kv["v"]),
+        (params["layers"], jnp.arange(cfg.n_layers)))
+    x = apply_norm(cfg, params["final_norm"], x)
+    logits = unembed(cfg, params["embed"], x)
+    return logits, {"k": pk, "v": pv}

@@ -1,17 +1,20 @@
 from repro.serve.batch import (BlockAllocator, BlockPool, PrefixIndex,
                                PrefixMatch, copy_block, gather_pages,
                                gather_slot, init_slot_cache, scatter_token,
-                               slice_token, slot_axes, write_prefill,
-                               write_slot)
+                               scatter_tokens, slice_token, slot_axes,
+                               tail_targets_multi, write_prefill, write_slot)
 from repro.serve.engine import ServeEngine
 from repro.serve.scheduler import Request, SlotScheduler
+from repro.serve.spec import SpecConfig, make_spec_decode
 from repro.serve.steps import (cache_specs, make_decode_step,
                                make_fused_decode, make_paged_decode,
                                make_prefill_step, make_slot_decode_step)
 
 __all__ = ["BlockAllocator", "BlockPool", "PrefixIndex", "PrefixMatch",
-           "Request", "ServeEngine", "SlotScheduler", "cache_specs",
-           "copy_block", "gather_pages", "gather_slot", "init_slot_cache",
-           "make_decode_step", "make_fused_decode", "make_paged_decode",
-           "make_prefill_step", "make_slot_decode_step", "scatter_token",
-           "slice_token", "slot_axes", "write_prefill", "write_slot"]
+           "Request", "ServeEngine", "SlotScheduler", "SpecConfig",
+           "cache_specs", "copy_block", "gather_pages", "gather_slot",
+           "init_slot_cache", "make_decode_step", "make_fused_decode",
+           "make_paged_decode", "make_prefill_step", "make_slot_decode_step",
+           "make_spec_decode", "scatter_token", "scatter_tokens",
+           "slice_token", "slot_axes", "tail_targets_multi", "write_prefill",
+           "write_slot"]

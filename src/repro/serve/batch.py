@@ -179,12 +179,45 @@ def tail_targets(tables, idx, live, block_size: int, trash):
     return blk, idx % block_size
 
 
+def tail_targets_multi(tables, idx, live, q: int, block_size: int, trash):
+    """Write coordinates for a window of ``q`` tokens at positions
+    ``idx .. idx + q - 1`` per slot: ``(blk [B, q], off [B, q])``.
+
+    The window may span a block boundary — each position resolves its own
+    page. Dead slots AND positions whose page the table does not cover
+    (speculative overshoot past the ensured/clamped width, or past capacity)
+    are routed to the trash block; unallocated in-range pages land in trash
+    for free because table padding already points there. ``q = 1``
+    degenerates to :func:`tail_targets`."""
+    B, max_blocks = tables.shape
+    pos = idx[:, None] + jnp.arange(q)                      # [B, q]
+    page = pos // block_size
+    ok = live[:, None] & (page < max_blocks)
+    gathered = jnp.take_along_axis(
+        tables, jnp.clip(page, 0, max_blocks - 1), axis=1)
+    return jnp.where(ok, gathered, trash), pos % block_size
+
+
 def scatter_token(pool_data, writes, blk, off):
     """Write one token's values for every slot at ``(blk[i], off[i])``.
 
     writes: leaves ``[B, *rest]`` (from the vmapped decode step); ``blk`` is
     already routed to the trash block for dead slots, so distinct live slots
     always target distinct blocks."""
+    return jax.tree.map(
+        lambda p, w: p.at[blk, off].set(w.astype(p.dtype)), pool_data, writes)
+
+
+def scatter_tokens(pool_data, writes, blk, off):
+    """Multi-token tail append: write ``q`` positions for every slot at
+    ``(blk[i, j], off[i, j])`` in one call — the speculative-verify window
+    landing across a block boundary costs the same single scatter as one
+    token.
+
+    writes: leaves ``[B, q, *rest]``; blk/off from
+    :func:`tail_targets_multi`, so a live slot's in-range coordinates are
+    distinct (no write races) and everything else is routed to the trash
+    block (trash collisions are benign — every trash write is garbage)."""
     return jax.tree.map(
         lambda p, w: p.at[blk, off].set(w.astype(p.dtype)), pool_data, writes)
 
@@ -371,6 +404,36 @@ class BlockAllocator:
         self._refs[old] -= 1
         self.tables[slot, page] = new
         return old, new
+
+    def trim(self, slot: int, n_tokens: int) -> int:
+        """Shrink ``slot``'s table to cover exactly ``n_tokens`` positions,
+        releasing the tail blocks past it — the speculative-decode rewind:
+        ``ensure`` grew the table for the chunk's worst-case window, the
+        verify rejected part of it, and the now-empty tail blocks (they hold
+        only rejected-candidate garbage past the slot's valid length) go
+        back to the free list. Returns the number of blocks released.
+
+        Release semantics match :meth:`release` per block (decrement once
+        per occurrence, free-list tail at refcount 0), so a shared tail —
+        impossible in the serving flow, where trimmed blocks are always
+        fresh ``ensure`` pops, but legal for the model checker — just drops
+        this slot's reference."""
+        keep = min(self.blocks_for(n_tokens), self.max_blocks)
+        dropped = 0
+        while self.owned(slot) > keep:
+            self._count[slot] -= 1
+            j = int(self._count[slot])
+            blk = int(self.tables[slot, j])
+            self.tables[slot, j] = self.trash
+            if self._refs[blk] < 1:
+                raise AssertionError(
+                    f"slot {slot} trimming block {blk} with refcount "
+                    f"{self._refs[blk]}")
+            self._refs[blk] -= 1
+            if self._refs[blk] == 0:
+                self._free.append(blk)
+            dropped += 1
+        return dropped
 
     def release(self, slot: int) -> None:
         """Drop one reference per block the slot's table holds and reset the
@@ -609,6 +672,11 @@ class BlockPool:
         """Host-side CoW fork; the caller MUST mirror a non-None return on
         ``.data`` with :func:`copy_block` before the next decode chunk."""
         return self.alloc.fork_for_write(slot, page)
+
+    def trim(self, slot: int, n_tokens: int) -> int:
+        """Speculative rewind: free the slot's tail blocks past
+        ``n_tokens`` positions; see :meth:`BlockAllocator.trim`."""
+        return self.alloc.trim(slot, n_tokens)
 
     def release(self, slot: int) -> None:
         """Drop the slot's references; refcount-0 blocks rejoin the free

@@ -59,6 +59,7 @@ from repro.serve.batch import (BlockPool, PrefixIndex, copy_block,
                                init_slot_cache, slot_axes, write_prefill,
                                write_slot)
 from repro.serve.scheduler import Request, SlotScheduler
+from repro.serve.spec import SpecConfig, make_spec_decode
 from repro.serve.steps import (make_decode_step, make_fused_decode,
                                make_paged_decode, make_paged_kernel_decode,
                                make_prefill_step)
@@ -73,10 +74,13 @@ class ServeEngine:
                  mode: str = "continuous", decode_chunk: int = 8,
                  prefill_bucket: bool = False, block_size: int = 16,
                  num_blocks: int | None = None, kv_impl: str = "auto",
-                 share_prefix: bool = True, recorder=None):
+                 share_prefix: bool = True,
+                 speculate: SpecConfig | None = None, recorder=None):
         if mode not in ("continuous", "cohort", "paged"):
             raise ValueError(
                 f"mode must be continuous|cohort|paged, got {mode!r}")
+        if speculate is not None and mode != "paged":
+            raise ValueError("speculate=SpecConfig(...) requires mode='paged'")
         if recorder is None:
             from repro.obs.recorder import NullRecorder
             recorder = NullRecorder()
@@ -167,6 +171,46 @@ class ServeEngine:
                 else None
             self._copy_block = jax.jit(
                 copy_block, donate_argnums=(0,) if donate else ())
+            if speculate is not None:
+                dcfg = speculate.draft_cfg
+                if dcfg.vocab != cfg.vocab:
+                    raise ValueError(
+                        "draft vocab must match the target's: "
+                        f"{dcfg.vocab} != {cfg.vocab}")
+                # every speculative round rewinds the draft by overwriting
+                # its cache ``idx`` — only sound when ALL decode-time state
+                # is position-indexed KV (plus static cross-attn): recurrent
+                # state folds rejected drafts in irreversibly, and a window
+                # ring cache may already have evicted the rewind target
+                if dcfg.window is not None or dcfg.family not in (
+                        "dense", "vlm", "moe", "audio"):
+                    raise ValueError(
+                        "speculative draft needs a full-attention KV family "
+                        "(rewind = idx overwrite); got "
+                        f"family={dcfg.family!r} window={dcfg.window!r}")
+                # the draft runs the plain dense slot-decode path against its
+                # own worst-case-reserved cache — no block accounting, its
+                # state is disposable (rebuilt from the true stream at every
+                # round's rewind)
+                self._draft_axes = slot_axes(dcfg, capacity,
+                                             params=speculate.draft_params)
+                self._draft_prefill = jax.jit(make_prefill_step(dcfg,
+                                                                capacity))
+                self._write_draft = jax.jit(
+                    partial(write_slot, axes=self._draft_axes),
+                    donate_argnums=(0,) if donate else ())
+                self._spec_rounds = speculate.rounds_for(decode_chunk)
+                spec_fn = make_spec_decode(
+                    cfg, dcfg, self._draft_axes, block_size, speculate.k,
+                    self._spec_rounds, eos_id,
+                    impl=kv_impl if kv_impl in ("reference", "pallas")
+                    else "auto")
+                # tables (arg 4) stay host-owned, like the single-token path
+                self._spec_decode = jax.jit(
+                    spec_fn,
+                    donate_argnums=(2, 3, 5, 6, 7, 8) if donate else ())
+        self.spec = speculate
+        self._dcache = None  # draft slot cache, created per drain
         self._next_rid = 0
         self._streamed: dict[int, int] = {}
         self.stats: dict = {}
@@ -217,38 +261,54 @@ class ServeEngine:
     # -- shared helpers ------------------------------------------------------
 
     def _prefill_inputs(self, tokens: jnp.ndarray,
-                        valid_len: int | None = None) -> dict:
+                        valid_len: int | None = None,
+                        cfg: ModelConfig | None = None) -> dict:
         """Family extras (zero-stub modalities) for a [B, S] token batch.
 
         valid_len: true prompt length when ``tokens`` is right-padded to a
-        bucket, so modality extras never land on pad positions."""
+        bucket, so modality extras never land on pad positions. cfg: the
+        model the batch feeds (defaults to the target; the speculative draft
+        passes its own config)."""
+        cfg = cfg or self.cfg
         B, S = tokens.shape
         batch = {"tokens": tokens}
-        if self.cfg.family == "audio":
+        if cfg.family == "audio":
             batch["src_embeds"] = jnp.zeros(
-                (B, self.cfg.src_len, self.cfg.d_model), self.cfg.dtype)
-        if self.cfg.family == "vlm":
-            n = min(self.cfg.n_img_tokens, valid_len or S)
+                (B, cfg.src_len, cfg.d_model), cfg.dtype)
+        if cfg.family == "vlm":
+            n = min(cfg.n_img_tokens, valid_len or S)
             batch["image_embeds"] = jnp.zeros(
-                (B, n, self.cfg.d_model), self.cfg.dtype)
+                (B, n, cfg.d_model), cfg.dtype)
             batch["image_pos"] = jnp.tile(
                 jnp.arange(n, dtype=jnp.int32)[None], (B, 1))
         return batch
 
-    def _admission_batch(self, req: Request) -> dict:
+    def _admission_batch(self, req: Request,
+                         cfg: ModelConfig | None = None) -> dict:
         """Prefill inputs for one admitted request: exact-length, or padded
-        to a power-of-two bucket when ``prefill_bucket`` is on."""
+        to a power-of-two bucket when ``prefill_bucket`` is on.
+
+        The buckets are shared across every prefill consumer — both serving
+        loops (dense continuous and paged) and, under speculation, the
+        draft's admission prefill — so target + draft cost one O(log S)
+        family of programs each, not one per distinct prompt length.
+        Bucket eligibility is re-checked against ``cfg``: a pad-sensitive
+        draft (window/ssm/moe) gets exact-length prefill even when the
+        target buckets."""
+        cfg = cfg or self.cfg
         L = len(req.prompt)
         toks = req.prompt
         length = None
-        if self._bucket:
+        if self._bucket and cfg.window is None and cfg.family in (
+                "dense", "vlm", "audio"):
             pad_to = min(max(8, 1 << max(L - 1, 1).bit_length()),
                          self.capacity)
             if L < pad_to:
                 toks = np.zeros(pad_to, np.int32)
                 toks[:L] = req.prompt
                 length = L
-        batch = self._prefill_inputs(jnp.asarray(toks[None]), valid_len=L)
+        batch = self._prefill_inputs(jnp.asarray(toks[None]), valid_len=L,
+                                     cfg=cfg)
         if length is not None:
             batch["length"] = jnp.asarray(length, jnp.int32)
         return batch
@@ -403,6 +463,17 @@ class ServeEngine:
                  "prefix_hits": 0, "cow_forks": 0, "prefill_tokens": 0,
                  "prefill_s": 0.0, "peak_blocks_in_use": 0,
                  "peak_shared_blocks": 0}
+        if self.spec is not None:
+            stats.update(spec_proposed=0, spec_accepted=0, draft_prefills=0)
+            src = None
+            if self.spec.draft_cfg.family == "audio":
+                src = jnp.zeros((B, self.spec.draft_cfg.src_len,
+                                 self.spec.draft_cfg.d_model),
+                                self.spec.draft_cfg.dtype)
+            self._dcache = init_slot_cache(self.spec.draft_cfg, B,
+                                           self.capacity,
+                                           params=self.spec.draft_params,
+                                           src_embeds=src)
 
         def finish(i: int) -> Request:
             req = sched.release(i)
@@ -454,6 +525,12 @@ class ServeEngine:
     def _paged_loop(self, tok, idx, live, remaining, stats, finish, preempt):
         sched, pool, eos = self.scheduler, self.pool, self.eos_id
         prefix, chunk = self.prefix, self.decode_chunk
+        # positions one dispatch can advance a slot: decode_chunk serially,
+        # or rounds × (k + 1) verify rows under speculation. Emitted rows
+        # only ever read positions below idx + adv, so this is also the
+        # pre-chunk ensure horizon; window writes past it trash-route.
+        adv = chunk if self.spec is None else (
+            self._spec_rounds * (self.spec.k + 1))
         while sched.has_work():
             # admission gated on free blocks, not free slots: a request is
             # admitted iff its prompt (+1 headroom) fits the pool right now,
@@ -526,6 +603,19 @@ class ServeEngine:
                                       pool.tables[i, :pool.owned(i)], first)
                 tok[i], idx[i] = first, len(req.prompt)
                 live[i], remaining[i] = True, req.remaining
+                if self.spec is not None:
+                    # draft prefill runs even on exact prefix hits — the
+                    # draft's dense cache has no prefix index to alias from,
+                    # and a preemption restart rebuilds it the same way
+                    with self.recorder.span("draft_prefill", rid=req.rid,
+                                            prompt_len=len(req.prompt)):
+                        _, d_cache = self._draft_prefill(
+                            self.spec.draft_params,
+                            self._admission_batch(req,
+                                                  cfg=self.spec.draft_cfg))
+                        self._dcache = self._write_draft(
+                            self._dcache, d_cache, jnp.asarray(i, jnp.int32))
+                    stats["draft_prefills"] += 1
                 yield from self._emit([req])
             stats["peak_concurrency"] = max(stats["peak_concurrency"],
                                             len(sched.occupied()))
@@ -558,7 +648,7 @@ class ServeEngine:
                     preempt(sched.youngest())   # may drop the shared ref
                 if not live[i]:
                     continue   # preempted itself while hunting fork room
-                need = int(idx[i]) + min(chunk, int(remaining[i]))
+                need = int(idx[i]) + min(adv, int(remaining[i]))
                 while not pool.ensure(i, need):
                     victim = sched.youngest()
                     if victim == i and len(sched.occupied()) == 1:
@@ -581,21 +671,44 @@ class ServeEngine:
             # re-specializes O(log max_blocks) times, not once per width.
             hw = min(1 << max(pool.high_water() - 1, 0).bit_length(),
                      pool.max_blocks)
-            with self.recorder.span("decode_chunk", steps=chunk):
-                out = self._paged_decode(
-                    self.params, jnp.asarray(tok), pool.data,
-                    jnp.asarray(pool.tables[:, :hw]), jnp.asarray(idx),
-                    jnp.asarray(live), jnp.asarray(remaining))
-            tok_d, pool.data, idx_d, live_d, remaining_d, tokens, emitted = out
+            with self.recorder.span("decode_chunk", steps=adv):
+                if self.spec is None:
+                    out = self._paged_decode(
+                        self.params, jnp.asarray(tok), pool.data,
+                        jnp.asarray(pool.tables[:, :hw]), jnp.asarray(idx),
+                        jnp.asarray(live), jnp.asarray(remaining))
+                    (tok_d, pool.data, idx_d, live_d, remaining_d, tokens,
+                     emitted) = out
+                else:
+                    out = self._spec_decode(
+                        self.params, self.spec.draft_params,
+                        jnp.asarray(tok), pool.data,
+                        jnp.asarray(pool.tables[:, :hw]), jnp.asarray(idx),
+                        jnp.asarray(live), jnp.asarray(remaining),
+                        self._dcache)
+                    (tok_d, pool.data, idx_d, live_d, remaining_d, tokens,
+                     emitted, self._dcache, proposed, accepted) = out
+                    n_p = int(np.asarray(proposed).sum())
+                    n_a = int(np.asarray(accepted).sum())
+                    stats["spec_proposed"] += n_p
+                    stats["spec_accepted"] += n_a
+                    self.recorder.counter_add("serve_spec_proposed", n_p)
+                    self.recorder.counter_add("serve_spec_accepted", n_a)
             # in place: finish()/preempt() close over these same arrays
             tok[:], idx[:] = np.asarray(tok_d), np.asarray(idx_d)
             live[:], remaining[:] = np.asarray(live_d), np.asarray(remaining_d)
             stats["decode_dispatches"] += 1
-            stats["decode_steps"] += chunk
+            stats["decode_steps"] += adv
             stats["emitted_tokens"] += int(np.asarray(emitted).sum())
             reqs = [r for _, r in sched.occupied()]
             for i in sched.record_decode(tokens, emitted, eos):
                 finish(i)
+            if self.spec is not None:
+                # speculative rewind: return the worst-case ensure headroom
+                # the verify didn't fill (rejected-window tail blocks) so a
+                # partial acceptance never strands pool pages across chunks
+                for i, _ in sched.occupied():
+                    pool.trim(i, int(idx[i]))
             yield from self._emit(reqs)
 
     # -- cohort drain (legacy baseline) --------------------------------------

@@ -1,0 +1,204 @@
+"""Speculative decoding on the paged serving stack: draft-propose, fused
+multi-token verify, lossless greedy acceptance.
+
+Every decode path in this repo is greedy argmax, which makes speculation
+*lossless*: a draft model proposes ``k`` tokens, the target model verifies
+all ``k + 1`` window positions in ONE fused dispatch
+(:func:`repro.models.paged.paged_verify_step`), and longest-prefix
+acceptance emits exactly the tokens the target would have produced one at a
+time — the same streams, bit for bit, just fewer sequential target passes
+per token (the "more useful work per expensive round" economics the fused
+engine chunk already applies to device dispatches).
+
+One speculative **round**:
+
+1. **Propose** — the draft (its own dense slot-layout KV cache, same
+   ``capacity``) greedily decodes ``k + 1`` steps from the current token.
+   The first ``k`` outputs are the proposals; the last output is discarded
+   but its step's K/V write matters: a fully-accepted window advances past
+   position ``idx + k``, and without the extra step that position would be
+   a hole in the draft cache next round.
+2. **Verify** — the target appends K/V for the window ``[tok, d_1 .. d_k]``
+   at positions ``idx .. idx + k`` through the block table
+   (:func:`repro.serve.batch.tail_targets_multi` routes dead slots and
+   positions past the table's coverage to the trash block) and attends all
+   rows causally in one dispatch; ``argmax`` per row gives the target's
+   greedy continuation ``t_1 .. t_{k+1}``.
+3. **Accept** — the longest prefix with ``d_j == t_j`` (``a`` tokens) is
+   emitted plus the free bonus token ``t_{a+1}``, under the same in-scan
+   EOS/budget masking rule as every other decode chunk. ``idx`` advances by
+   the emitted count only: rejected positions hold garbage K/V that the
+   next window overwrites before any emitted row can attend it, and the
+   engine's post-chunk :meth:`~repro.serve.batch.BlockAllocator.trim`
+   returns now-empty speculative tail blocks to the pool.
+
+Rejection never rewinds device state explicitly — positions past the
+accepted length are simply outside every masked read (``lengths`` follow
+``idx``), which is the same write-then-mask discipline the single-token
+paged chunk already relies on for dead slots.
+
+Copy-on-write safety is inherited, not re-implemented: the engine's
+pre-chunk fork pass makes each live slot's tail page exclusive before any
+speculative write, and pages past the tail are fresh ``ensure`` pops
+(refcount 1 by construction), so a shared prefix block is never written
+through — sharing-on speculative streams stay identical to sharing-off
+(tests/test_spec_decode.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.paged import paged_verify_step
+from repro.serve.batch import tail_targets_multi
+from repro.serve.steps import make_slot_decode_step
+
+
+@dataclasses.dataclass
+class SpecConfig:
+    """Speculative-decoding engine option (``ServeEngine(speculate=...)``).
+
+    draft_cfg/draft_params: any registered config with the target's vocab —
+    e.g. a reduced-layer ``smollm_360m`` variant, or the target itself
+    (self-drafting: acceptance 1.0, useful as the infrastructure ceiling).
+    k: draft tokens proposed per round (the verify window is ``k + 1``).
+    rounds: speculative rounds fused per device dispatch; default covers at
+    least ``decode_chunk`` positions (``ceil(decode_chunk / (k + 1))``).
+    """
+    draft_cfg: ModelConfig
+    draft_params: Any
+    k: int = 3
+    rounds: int | None = None
+
+    def __post_init__(self):
+        if self.k < 1:
+            raise ValueError(f"speculation needs k >= 1, got {self.k}")
+
+    def rounds_for(self, decode_chunk: int) -> int:
+        if self.rounds is not None:
+            return max(1, self.rounds)
+        return max(1, -(-decode_chunk // (self.k + 1)))
+
+
+def make_spec_decode(cfg: ModelConfig, draft_cfg: ModelConfig, draft_axes,
+                     block_size: int, k: int, rounds: int,
+                     eos_id: int | None, *, impl: str = "auto",
+                     interpret: bool | None = None):
+    """Build the fused speculative decode chunk: ``rounds`` propose→verify→
+    accept rounds in ONE device program.
+
+    Signature: ``(params, draft_params, tok [B], pool_data,
+    tables [B, n_pages], idx [B], live [B], remaining [B], draft_cache) ->
+    (tok, pool_data, idx, live, remaining, tokens [rounds * (k+1), B],
+    emitted [rounds * (k+1), B], draft_cache, proposed [rounds, B],
+    accepted [rounds, B])``.
+
+    The tokens/emitted grids follow the standard chunk convention
+    (row-major over verify rows), so ``SlotScheduler.record_decode``
+    consumes them unchanged; ``proposed``/``accepted`` are per-round draft
+    counts for the acceptance-rate stats. ``impl`` selects the verify
+    attention: ``"reference"`` (jnp gather oracle), ``"pallas"`` (forced
+    kernel, ``interpret`` per the use_pallas policy), or ``"auto"``
+    (compiled Pallas on TPU, oracle elsewhere).
+    """
+    from repro.kernels import ops, paged_attention_multi_ref
+
+    if impl not in ("auto", "pallas", "reference"):
+        raise ValueError(f"impl must be auto|pallas|reference, got {impl!r}")
+
+    def attend(q, k_pages, v_pages, tables, lengths, layer):
+        if impl == "reference":
+            return paged_attention_multi_ref(q, k_pages, v_pages, tables,
+                                             lengths, layer)
+        if impl == "pallas":
+            return ops.paged_attention_multi(q, k_pages, v_pages, tables,
+                                             lengths, layer,
+                                             force_pallas=True,
+                                             interpret=interpret)
+        return ops.paged_attention_multi(q, k_pages, v_pages, tables,
+                                         lengths, layer)
+
+    draft_step = make_slot_decode_step(draft_cfg, draft_axes)
+    Q = k + 1
+
+    def chunk(params, draft_params, tok, pool_data, tables, idx, live,
+              remaining, dcache):
+        trash = pool_data["kv"]["k"].shape[0] - 1
+        B = tok.shape[0]
+
+        def round_body(carry, _):
+            tok, pool_kv, idx, live, remaining, dcache = carry
+            live_in = live
+
+            # 1. propose: rewind the draft to the target's position (its
+            # cached K/V below idx is exact — accepted inputs ARE the true
+            # stream) and decode Q = k + 1 greedy steps
+            dcache = {**dcache, "idx": idx}
+
+            def draft_body(dc, _):
+                dtok, dcc = dc
+                ntok, dcc = draft_step(draft_params, dtok, dcc)
+                return (ntok, dcc), ntok
+
+            (_, dcache), douts = jax.lax.scan(
+                draft_body, (tok, dcache), None, length=Q)
+            drafts = douts[:k].T                            # [B, k]
+
+            # 2. verify all window rows in one dispatch
+            qtoks = jnp.concatenate([tok[:, None], drafts], axis=1)
+            pos = idx[:, None] + jnp.arange(Q, dtype=idx.dtype)
+            blks, offs = tail_targets_multi(tables, idx, live, Q,
+                                            block_size, trash)
+            lengths = jnp.where(live, idx + Q, 0).astype(jnp.int32)
+            logits, pool_kv = paged_verify_step(
+                cfg, params, qtoks, pool_kv, tables, blks, offs, pos,
+                lengths, attend=attend)
+            targets = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+            # 3. longest-prefix acceptance (+ the bonus row a)
+            match = (drafts == targets[:, :k]).astype(jnp.int32)
+            a = jnp.cumprod(match, axis=1).sum(axis=1)      # [B] in [0, k]
+
+            # 4. emission — the multi-row form of the serial in-scan rule:
+            # row j emits iff the slot was live, every prior row emitted
+            # (j <= a, no earlier EOS) and budget reaches it. All masks are
+            # prefix-monotone, so the row set is a prefix — exactly the
+            # tokens Request.add_token would record one at a time. Rows at
+            # or past `remaining` may read trash-routed positions and carry
+            # garbage; every consumer below is masked to emitted rows.
+            rows = jnp.arange(Q)
+            if eos_id is None:
+                is_eos = jnp.zeros(targets.shape, bool)
+            else:
+                is_eos = targets == eos_id
+            eos_before = (jnp.cumsum(is_eos, axis=1)
+                          - is_eos.astype(jnp.int32)) > 0
+            emit = (live[:, None] & (rows[None] <= a[:, None])
+                    & ~eos_before & (rows[None] < remaining[:, None]))
+            n_emit = emit.sum(axis=1).astype(idx.dtype)
+            remaining = remaining - n_emit
+            hit_eos = (emit & is_eos).any(axis=1)
+            live = live & ~hit_eos & (remaining > 0)
+            last = jnp.maximum(n_emit - 1, 0)
+            tok = jnp.where(n_emit > 0, targets[jnp.arange(B), last], tok)
+            idx = idx + n_emit
+
+            proposed = jnp.where(live_in, k, 0).astype(jnp.int32)
+            accepted = jnp.where(live_in, a, 0).astype(jnp.int32)
+            return ((tok, pool_kv, idx, live, remaining, dcache),
+                    (targets.T, emit.T, proposed, accepted))
+
+        carry, (tokens, emitted, proposed, accepted) = jax.lax.scan(
+            round_body,
+            (tok, pool_data["kv"], idx, live, remaining, dcache), None,
+            length=rounds)
+        tok, pool_kv, idx, live, remaining, dcache = carry
+        return (tok, {"kv": pool_kv}, idx, live, remaining,
+                tokens.reshape(rounds * Q, B), emitted.reshape(rounds * Q, B),
+                dcache, proposed, accepted)
+
+    return chunk

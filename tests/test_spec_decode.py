@@ -1,0 +1,530 @@
+"""Contract suite for speculative decoding on the paged serving stack.
+
+The spine is the repo's strongest invariant carried over unchanged: every
+decode path is greedy argmax, so longest-prefix acceptance is *lossless*
+and a speculative drain must produce streams bitwise equal to serial
+one-at-a-time decode AND to the non-speculative paged drain — in every
+mode, including forced preemption, ``share_prefix=True`` and the
+pallas-interpret kernel path.
+
+Layers covered here:
+
+- unit tests for the multi-token batch ops (`tail_targets_multi` window
+  routing across block boundaries / dead slots / table overshoot,
+  `scatter_tokens` block-spanning append, `BlockAllocator.trim` rewind
+  semantics validated against `allocator_invariants`);
+- engine-level validation (speculate requires paged mode, draft vocab
+  must match, rewind-unsafe draft families rejected, k >= 1);
+- stream-equality drains (several k, self-drafting, EOS mid-window,
+  preemption, prefix sharing, pallas interpret) with pool-drain audits;
+- pow2 prefill bucketing in paged mode (streams stay serial-equal, target
+  and draft each compile O(log S) prefill programs, not one per length);
+- property sweeps: random speculative traces through an engine whose
+  allocator re-checks every invariant after every mutation (trim
+  included), run both as a seeded deterministic sweep (always on) and as
+  a hypothesis sweep (skipped where the package is absent).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.contracts import allocator_invariants
+from repro.configs import get
+from repro.models import decode_step, init_params, prefill
+from repro.serve import ServeEngine, SpecConfig
+from repro.serve.batch import (BlockAllocator, scatter_tokens, tail_targets,
+                               tail_targets_multi)
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = get("smollm-360m").reduced().with_overrides(
+        d_model=32, n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64, vocab=64)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def draft(model):
+    cfg, _ = model
+    dcfg = cfg.with_overrides(n_layers=1)
+    return dcfg, init_params(dcfg, jax.random.PRNGKey(1))
+
+
+def _serial_greedy(cfg, params, prompt, max_new, eos_id=None, capacity=32):
+    lg, cache = prefill(cfg, params,
+                        jnp.asarray(np.asarray(prompt, np.int32)[None]),
+                        capacity)
+    tok = int(jnp.argmax(lg[0, -1]))
+    out = [tok]
+    while len(out) < max_new and (eos_id is None or tok != eos_id):
+        lg, cache = decode_step(cfg, params,
+                                jnp.asarray([[tok]], jnp.int32), cache)
+        tok = int(jnp.argmax(lg[0, -1]))
+        out.append(tok)
+    return out
+
+
+# -- multi-token batch ops ---------------------------------------------------
+
+
+def test_tail_targets_multi_spans_block_boundary():
+    """A q-window starting mid-block resolves each position's own page; the
+    q=1 column degenerates to the single-token routing."""
+    bs, trash = 4, 9
+    tables = jnp.asarray([[5, 2, trash], [7, trash, trash]], jnp.int32)
+    idx = jnp.asarray([3, 1], jnp.int32)          # slot 0 crosses into page 1
+    live = jnp.asarray([True, True])
+    blk, off = tail_targets_multi(tables, idx, live, 3, bs, trash)
+    assert blk.tolist() == [[5, 2, 2], [7, 7, 7]]
+    assert off.tolist() == [[3, 0, 1], [1, 2, 3]]
+    blk1, off1 = tail_targets(tables, idx, live, bs, trash)
+    assert blk[:, 0].tolist() == blk1.tolist()
+    assert off[:, 0].tolist() == off1.tolist()
+
+
+def test_tail_targets_multi_trash_routes_dead_and_overshoot():
+    """Dead slots and positions past the table width go to the trash block;
+    unallocated-but-in-range pages are trash for free via table padding."""
+    bs, trash = 2, 4
+    tables = jnp.asarray([[3, trash], [1, 0]], jnp.int32)
+    idx = jnp.asarray([1, 3], jnp.int32)
+    live = jnp.asarray([True, False])
+    blk, off = tail_targets_multi(tables, idx, live, 4, bs, trash)
+    # slot 0: pos 1 in page 0 (blk 3), pos 2-3 in page 1 (unallocated ->
+    # padding trash), pos 4 past the table width (clamped route -> trash)
+    assert blk[0].tolist() == [3, trash, trash, trash]
+    assert off[0].tolist() == [1, 0, 1, 0]
+    # slot 1 is dead: every position trash-routed regardless of its table
+    assert blk[1].tolist() == [trash] * 4
+    assert off[1].tolist() == [1, 0, 1, 0]
+
+
+def test_scatter_tokens_block_spanning_write():
+    """One scatter lands a window across a block boundary at the right rows
+    and leaves every other row (other blocks, earlier offsets) untouched;
+    trash collisions overwrite only the trash block."""
+    bs, trash = 4, 3
+    pool = {"k": jnp.full((trash + 1, bs, 2), -1.0, jnp.float32)}
+    tables = jnp.asarray([[0, 1], [2, trash]], jnp.int32)
+    idx = jnp.asarray([2, 0], jnp.int32)
+    live = jnp.asarray([True, False])
+    blk, off = tail_targets_multi(tables, idx, live, 3, bs, trash)
+    writes = {"k": jnp.arange(2 * 3 * 2, dtype=jnp.float32).reshape(2, 3, 2)}
+    out = scatter_tokens(pool, writes, blk, off)["k"]
+    # live slot 0: positions 2,3 in block 0, position 4 in block 1
+    assert out[0, 2].tolist() == [0.0, 1.0]
+    assert out[0, 3].tolist() == [2.0, 3.0]
+    assert out[1, 0].tolist() == [4.0, 5.0]
+    # dead slot 1's whole window hit trash; its own block 2 is untouched
+    assert (out[2] == -1.0).all()
+    # rows never written keep their sentinel
+    assert (out[0, :2] == -1.0).all()
+    assert (out[1, 1:] == -1.0).all()
+
+
+def test_trim_rewind_frees_tail_blocks():
+    """trim is the speculative rewind: ensure grows the table for the
+    worst-case window, verify rejects part of it, trim returns exactly the
+    now-empty tail blocks and every allocator invariant holds throughout."""
+    a = BlockAllocator(num_blocks=8, block_size=2, max_batch=2, capacity=16)
+    assert a.ensure(0, 7)                      # 4 blocks for 7 positions
+    assert a.owned(0) == 4
+    freed = a.trim(0, 3)                       # only 2 blocks still covered
+    assert freed == 2 and a.owned(0) == 2
+    assert a.free_blocks == 8 - 2
+    assert allocator_invariants(a, label="after trim") is None
+    assert a.trim(0, 3) == 0                   # idempotent at the same length
+    assert a.trim(0, 0) == 2                   # full rewind frees the rest
+    assert a.free_blocks == 8
+    assert allocator_invariants(a, label="after full trim") is None
+
+
+def test_trim_shared_tail_drops_only_this_slots_ref():
+    """A shared trimmed block (impossible in the serving flow, legal for the
+    model checker) loses one reference, not its other holder."""
+    a = BlockAllocator(num_blocks=4, block_size=2, max_batch=2, capacity=8)
+    assert a.ensure(0, 4)
+    a.attach(1, [int(a.tables[0, 0]), int(a.tables[0, 1])])
+    shared = int(a.tables[1, 1])
+    assert a.refcount(shared) == 2
+    assert a.trim(1, 0) == 2
+    assert a.refcount(shared) == 1 and a.owned(0) == 2
+    assert allocator_invariants(a, label="after shared trim") is None
+
+
+# -- engine validation -------------------------------------------------------
+
+
+def test_speculate_requires_paged_mode(model, draft):
+    cfg, params = model
+    with pytest.raises(ValueError, match="paged"):
+        ServeEngine(cfg, params, capacity=16, max_batch=2, mode="continuous",
+                    speculate=SpecConfig(*draft, k=2))
+
+
+def test_speculate_rejects_vocab_mismatch(model, draft):
+    cfg, params = model
+    dcfg, dparams = draft
+    bad = dcfg.with_overrides(vocab=cfg.vocab + 1)
+    with pytest.raises(ValueError, match="vocab"):
+        ServeEngine(cfg, params, capacity=16, max_batch=2, mode="paged",
+                    speculate=SpecConfig(bad, dparams, k=2))
+
+
+def test_speculate_rejects_rewind_unsafe_drafts(model):
+    """Rewind = overwriting the draft cache's idx — unsound for recurrent
+    state (folds rejected drafts in) and window ring caches (the rewind
+    target may already be evicted)."""
+    cfg, params = model
+    ssm = get("rwkv6-1.6b").reduced().with_overrides(vocab=cfg.vocab)
+    windowed = cfg.with_overrides(window=8)
+    for dcfg in (ssm, windowed):
+        dparams = init_params(dcfg, jax.random.PRNGKey(2))
+        with pytest.raises(ValueError, match="rewind"):
+            ServeEngine(cfg, params, capacity=16, max_batch=2, mode="paged",
+                        speculate=SpecConfig(dcfg, dparams, k=2))
+
+
+def test_spec_config_rejects_k_below_one(draft):
+    with pytest.raises(ValueError, match="k >= 1"):
+        SpecConfig(*draft, k=0)
+
+
+def test_spec_rounds_cover_decode_chunk(draft):
+    dcfg, dparams = draft
+    assert SpecConfig(dcfg, dparams, k=3).rounds_for(8) == 2
+    assert SpecConfig(dcfg, dparams, k=3).rounds_for(1) == 1
+    assert SpecConfig(dcfg, dparams, k=2, rounds=5).rounds_for(8) == 5
+
+
+# -- lossless stream contracts -----------------------------------------------
+
+
+@pytest.mark.parametrize("k", [1, 2, 3])
+def test_spec_streams_bitwise_equal_serial_and_paged(model, draft, k):
+    """spec-on == spec-off == serial for every request, at several window
+    sizes, with both pools fully reclaimed."""
+    cfg, params = model
+    rng = np.random.default_rng(k)
+    reqs = [(rng.integers(0, cfg.vocab, size=int(rng.integers(3, 10))),
+             int(b)) for b in (4, 7, 1, 5)]
+    spec = ServeEngine(cfg, params, mode="paged", capacity=32, max_batch=3,
+                       decode_chunk=3, block_size=4,
+                       speculate=SpecConfig(*draft, k=k))
+    base = ServeEngine(cfg, params, mode="paged", capacity=32, max_batch=3,
+                       decode_chunk=3, block_size=4)
+    rid_s = [spec.submit(p, max_new_tokens=b) for p, b in reqs]
+    rid_b = [base.submit(p, max_new_tokens=b) for p, b in reqs]
+    res_s, res_b = spec.run(), base.run()
+    for (p, b), rs, rb in zip(reqs, rid_s, rid_b):
+        want = _serial_greedy(cfg, params, p, b)
+        assert res_s[rs] == want, (k, rs, res_s[rs], want)
+        assert res_b[rb] == want, (k, rb)
+    assert spec.stats["spec_proposed"] > 0
+    assert 0 < spec.stats["spec_accepted"] <= spec.stats["spec_proposed"]
+    for eng in (spec, base):
+        assert eng.pool.free_blocks == eng.pool.num_blocks
+
+
+def test_self_draft_accepts_everything(model):
+    """Drafting with the target itself is the infrastructure ceiling: every
+    proposal matches the verify argmax, so acceptance is exactly 1."""
+    cfg, params = model
+    rng = np.random.default_rng(7)
+    reqs = [(rng.integers(0, cfg.vocab, size=5), b) for b in (6, 9)]
+    eng = ServeEngine(cfg, params, mode="paged", capacity=32, max_batch=2,
+                      decode_chunk=4, block_size=4,
+                      speculate=SpecConfig(cfg, params, k=3))
+    rids = [eng.submit(p, max_new_tokens=b) for p, b in reqs]
+    res = eng.run()
+    for (p, b), r in zip(reqs, rids):
+        assert res[r] == _serial_greedy(cfg, params, p, b)
+    assert eng.stats["spec_accepted"] == eng.stats["spec_proposed"] > 0
+
+
+def test_spec_streams_survive_forced_preemption(model, draft):
+    """A deliberately undersized pool preempts speculative slots mid-decode;
+    restarts regenerate bitwise-identical streams and the speculative
+    headroom accounting never wedges or leaks the pool."""
+    cfg, params = model
+    rng = np.random.default_rng(1)
+    reqs = [(rng.integers(0, cfg.vocab, size=int(rng.integers(4, 12))),
+             int(b)) for b in (9, 8, 10, 7, 9)]
+    eng = ServeEngine(cfg, params, mode="paged", capacity=32, max_batch=4,
+                      decode_chunk=4, block_size=4, num_blocks=7,
+                      speculate=SpecConfig(*draft, k=2))
+    rids = [eng.submit(p, max_new_tokens=b) for p, b in reqs]
+    res = eng.run()
+    assert eng.stats["preemptions"] > 0, "pool sizing failed to force preempt"
+    for (p, b), r in zip(reqs, rids):
+        assert res[r] == _serial_greedy(cfg, params, p, b), r
+    assert eng.pool.free_blocks == eng.pool.num_blocks
+
+
+@pytest.mark.parametrize("share", [True, False])
+def test_spec_streams_with_prefix_sharing(model, draft, share):
+    """CoW prefix sharing under speculation: the pre-chunk fork pass makes
+    tail pages exclusive before any speculative write, so sharing-on
+    streams equal sharing-off equal serial (exact resubmission included)."""
+    cfg, params = model
+    rng = np.random.default_rng(3)
+    system = rng.integers(0, cfg.vocab, size=9)
+    reqs = [(np.concatenate([system,
+                             rng.integers(0, cfg.vocab,
+                                          size=int(rng.integers(1, 4)))]),
+             int(b)) for b in (5, 6, 4, 5)]
+    reqs.append((reqs[0][0], 5))  # exact resubmission -> prefix hit
+    eng = ServeEngine(cfg, params, mode="paged", capacity=32, max_batch=4,
+                      decode_chunk=3, block_size=4, share_prefix=share,
+                      speculate=SpecConfig(*draft, k=2))
+    rids = [eng.submit(p, max_new_tokens=b) for p, b in reqs]
+    res = eng.run()
+    for (p, b), r in zip(reqs, rids):
+        assert res[r] == _serial_greedy(cfg, params, p, b), (share, r)
+    if share:
+        assert eng.stats["prefix_hits"] > 0
+    assert eng.pool.free_blocks == eng.pool.num_blocks
+
+
+def test_spec_streams_pallas_interpret(model, draft):
+    """The forced-pallas verify path (interpret mode off-TPU) is held to the
+    same bitwise contract as the reference gather."""
+    cfg, params = model
+    rng = np.random.default_rng(5)
+    reqs = [(rng.integers(0, cfg.vocab, size=int(rng.integers(3, 8))),
+             int(b)) for b in (4, 6, 3)]
+    eng = ServeEngine(cfg, params, mode="paged", capacity=16, max_batch=3,
+                      decode_chunk=3, block_size=4, num_blocks=16,
+                      kv_impl="pallas", speculate=SpecConfig(*draft, k=2))
+    rids = [eng.submit(p, max_new_tokens=b) for p, b in reqs]
+    res = eng.run()
+    for (p, b), r in zip(reqs, rids):
+        assert res[r] == _serial_greedy(cfg, params, p, b, capacity=16), r
+    assert eng.pool.free_blocks == eng.pool.num_blocks
+
+
+def test_spec_eos_inside_accepted_window(model, draft):
+    """EOS landing mid-window must truncate the stream exactly where serial
+    decode stops — accepted positions past EOS are masked, never emitted."""
+    cfg, params = model
+    prompt = [5, 9, 2, 7]
+    ref = _serial_greedy(cfg, params, prompt, 8)
+    cut = next(i for i in range(1, len(ref)) if ref[i] not in ref[:i])
+    eng = ServeEngine(cfg, params, mode="paged", capacity=32, max_batch=2,
+                      decode_chunk=4, block_size=4, eos_id=ref[cut],
+                      speculate=SpecConfig(*draft, k=2))
+    r1 = eng.submit(prompt, 8)
+    r2 = eng.submit([1, 2, 3], 6)
+    res = eng.run()
+    assert res[r1] == ref[:cut + 1] and res[r1][-1] == ref[cut]
+    assert len(res[r2]) <= 6
+    assert eng.pool.free_blocks == eng.pool.num_blocks
+
+
+# -- pow2 prefill bucketing in paged mode ------------------------------------
+
+
+def test_paged_bucketed_streams_match_serial(model):
+    """prefill_bucket in paged mode: streams stay serial-equal and distinct
+    prompt lengths collapse to O(log S) compiled prefill shapes."""
+    cfg, params = model
+    rng = np.random.default_rng(11)
+    prompts = [rng.integers(0, cfg.vocab, size=n)
+               for n in (3, 4, 5, 6, 7, 9, 11, 13)]
+    eng = ServeEngine(cfg, params, mode="paged", capacity=32, max_batch=3,
+                      decode_chunk=3, block_size=4, prefill_bucket=True)
+    assert eng._bucket
+    rids = [eng.submit(p, 4) for p in prompts]
+    res = eng.run()
+    for p, r in zip(prompts, rids):
+        assert res[r] == _serial_greedy(cfg, params, p, 4), r
+    # 8 distinct lengths, but only buckets 4/8/16 get compiled
+    assert eng._prefill._cache_size() <= 3
+    assert eng.pool.free_blocks == eng.pool.num_blocks
+
+
+def test_spec_draft_shares_prefill_buckets(model, draft):
+    """Under speculation the draft prefills at admission too; bucketing must
+    keep BOTH compile counts at O(log S), not double the program count."""
+    cfg, params = model
+    rng = np.random.default_rng(13)
+    prompts = [rng.integers(0, cfg.vocab, size=n)
+               for n in (3, 4, 5, 6, 7, 9, 11, 13)]
+    eng = ServeEngine(cfg, params, mode="paged", capacity=32, max_batch=3,
+                      decode_chunk=3, block_size=4, prefill_bucket=True,
+                      speculate=SpecConfig(*draft, k=2))
+    rids = [eng.submit(p, 4) for p in prompts]
+    res = eng.run()
+    for p, r in zip(prompts, rids):
+        assert res[r] == _serial_greedy(cfg, params, p, 4), r
+    assert eng._prefill._cache_size() <= 3
+    assert eng._draft_prefill._cache_size() <= 3
+    assert eng.stats["draft_prefills"] >= len(prompts)
+
+
+# -- property sweeps ---------------------------------------------------------
+
+
+class CheckedAllocator(BlockAllocator):
+    """Re-validates every refcount/free-list/table invariant after each
+    mutation — trim (the speculative rewind) included — so a violation
+    surfaces at the op that caused it, not at the post-drain audit."""
+
+    def _check(self, op: str) -> None:
+        msg = allocator_invariants(self, label=f"after {op}")
+        assert msg is None, msg
+
+    def ensure(self, slot, n_tokens):
+        ok = super().ensure(slot, n_tokens)
+        self._check(f"ensure({slot}, {n_tokens})")
+        return ok
+
+    def attach(self, slot, blocks):
+        super().attach(slot, blocks)
+        self._check(f"attach({slot}, {list(map(int, blocks))})")
+
+    def fork_for_write(self, slot, page):
+        out = super().fork_for_write(slot, page)
+        self._check(f"fork_for_write({slot}, {page})")
+        return out
+
+    def trim(self, slot, n_tokens):
+        freed = super().trim(slot, n_tokens)
+        self._check(f"trim({slot}, {n_tokens})")
+        return freed
+
+    def release(self, slot):
+        super().release(slot)
+        self._check(f"release({slot})")
+
+
+def _checked_spec_engine(model, draft, t):
+    cfg, params = model
+    eng = ServeEngine(cfg, params, mode="paged", capacity=32,
+                      max_batch=t["max_batch"], decode_chunk=t["chunk"],
+                      block_size=t["block_size"],
+                      num_blocks=t["num_blocks"], eos_id=t["eos_id"],
+                      share_prefix=t["share"],
+                      speculate=SpecConfig(*draft, k=t["k"]))
+    checked = CheckedAllocator(num_blocks=t["num_blocks"],
+                               block_size=t["block_size"],
+                               max_batch=t["max_batch"], capacity=32)
+    eng.pool.alloc = checked
+    if eng.prefix is not None:
+        eng.prefix.alloc = checked
+    return eng
+
+
+def _draw_spec_trace(draw_int, draw_choice, vocab):
+    """Random speculative workload + engine shape from any integer source;
+    pool sizes range from barely-fits-one upward so a good fraction of
+    traces preempt speculative slots mid-decode."""
+    block_size = draw_choice([2, 4])
+    k = draw_int(1, 3)
+    workload = [([draw_int(0, vocab - 1) for _ in range(draw_int(1, 8))],
+                 draw_int(1, 7))
+                for _ in range(draw_int(2, 5))]
+    need = max(-(-(len(p) + b + k) // block_size) for p, b in workload)
+    return dict(block_size=block_size, k=k, chunk=draw_int(1, 5),
+                max_batch=draw_int(1, 3), eos_id=draw_choice([None, 0, 7]),
+                num_blocks=draw_int(need, need + 16 // block_size),
+                share=draw_choice([True, False]), workload=workload)
+
+
+def _run_spec_trace(model, draft, t):
+    cfg, params = model
+    eng = _checked_spec_engine(model, draft, t)
+    rids = [eng.submit(np.asarray(p, np.int32), b)
+            for p, b in t["workload"]]
+    res = eng.run()
+    for (p, b), r in zip(t["workload"], rids):
+        want = _serial_greedy(cfg, params, p, b, eos_id=t["eos_id"])
+        assert res[r] == want, (t, r, res[r], want)
+    assert eng.pool.free_blocks == eng.pool.num_blocks, t
+    assert (eng.pool._refs == 0).all(), t
+    assert (eng.pool.tables == eng.pool.trash).all(), t
+
+
+@pytest.mark.parametrize("seed", range(4))
+def test_spec_traces_seeded(model, draft, seed):
+    """Deterministic fallback for the hypothesis sweep below — always runs,
+    including environments without hypothesis."""
+    rng = np.random.default_rng(100 + seed)
+    t = _draw_spec_trace(lambda lo, hi: int(rng.integers(lo, hi + 1)),
+                         lambda seq: seq[int(rng.integers(len(seq)))],
+                         model[0].vocab)
+    _run_spec_trace(model, draft, t)
+
+
+def test_spec_traces_hypothesis(model, draft):
+    hypothesis = pytest.importorskip(
+        "hypothesis", reason="adversarial sweeps need hypothesis")
+    from hypothesis import strategies as st
+
+    @hypothesis.settings(max_examples=6, deadline=None, database=None)
+    @hypothesis.given(st.data())
+    def run(data):
+        t = _draw_spec_trace(
+            lambda lo, hi: data.draw(st.integers(lo, hi)),
+            lambda seq: data.draw(st.sampled_from(list(seq))),
+            model[0].vocab)
+        _run_spec_trace(model, draft, t)
+
+    run()
+
+
+def test_scatter_tokens_roundtrip_hypothesis():
+    """Property form of the block-spanning append: for random tables, idx
+    and liveness, every live in-coverage position reads back its write and
+    no block outside the routed set changes."""
+    hypothesis = pytest.importorskip(
+        "hypothesis", reason="adversarial sweeps need hypothesis")
+    from hypothesis import strategies as st
+
+    @hypothesis.settings(max_examples=25, deadline=None, database=None)
+    @hypothesis.given(st.data())
+    def run(data):
+        bs = data.draw(st.sampled_from([2, 4]), label="block_size")
+        B = data.draw(st.integers(1, 3), label="B")
+        q = data.draw(st.integers(1, 2 * bs + 1), label="q")
+        max_blocks = data.draw(st.integers(1, 4), label="max_blocks")
+        n_blocks = B * max_blocks
+        trash = n_blocks
+        # distinct blocks per live slot, mirroring allocator output
+        perm = data.draw(st.permutations(range(n_blocks)), label="perm")
+        tables = np.full((B, max_blocks), trash, np.int32)
+        owned = [data.draw(st.integers(0, max_blocks), label=f"owned{i}")
+                 for i in range(B)]
+        it = iter(perm)
+        for i in range(B):
+            for j in range(owned[i]):
+                tables[i, j] = next(it)
+        idx = np.asarray([data.draw(st.integers(0, bs * max_blocks),
+                                    label=f"idx{i}") for i in range(B)],
+                         np.int32)
+        live = np.asarray([data.draw(st.booleans(), label=f"live{i}")
+                           for i in range(B)])
+        pool = {"k": jnp.full((trash + 1, bs, 2), -1.0, jnp.float32)}
+        blk, off = tail_targets_multi(jnp.asarray(tables), jnp.asarray(idx),
+                                      jnp.asarray(live), q, bs, trash)
+        writes = {"k": jnp.arange(B * q * 2, dtype=jnp.float32)
+                  .reshape(B, q, 2)}
+        out = np.asarray(scatter_tokens(pool, writes, blk, off)["k"])
+        touched = set()
+        for i in range(B):
+            for j in range(q):
+                pos = int(idx[i]) + j
+                page = pos // bs
+                if live[i] and page < max_blocks and \
+                        tables[i, page] != trash:
+                    b = int(tables[i, page])
+                    assert out[b, pos % bs].tolist() == \
+                        [float(2 * (i * q + j)), float(2 * (i * q + j) + 1)]
+                    touched.add(b)
+        for b in range(n_blocks):
+            if b not in touched:
+                assert (out[b] == -1.0).all(), b
+
+    run()
